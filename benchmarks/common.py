@@ -1,0 +1,77 @@
+"""Shared helpers for the benchmark harnesses."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.placement import Placement, place, place_spatial
+from repro.core.simulator import SimReport, simulate
+from repro.core.workload import (Workload, power_law_rates, synthesize,
+                                 table1_models)
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
+
+
+def save(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def paper_models(n_devices: int = 32):
+    """Table-1 model mix (19 LLaMA-family LLMs)."""
+    return table1_models()
+
+
+def workload_for(models, alpha: float, max_rate: float, horizon: float,
+                 seed: int = 0, scale_to_avg=None) -> Workload:
+    names = [m.name for m in models]
+    return synthesize(names, alpha=alpha, max_rate=max_rate,
+                      horizon=horizon, seed=seed, scale_to_avg=scale_to_avg)
+
+
+def three_systems(models_rates, wl, n_devices: int,
+                  slo_scales=(4, 8, 16)) -> Dict[str, SimReport]:
+    """MuxServe vs spatial partitioning vs temporal multiplexing —
+    the comparison of Figs. 5 & 7."""
+    mux_pl = place(models_rates, n_devices=n_devices, group_limit=48)
+    sp_pl = place_spatial(models_rates, n_devices=n_devices)
+    return {
+        "muxserve": simulate(mux_pl, wl, mode="spatial-temporal",
+                             policy="adbs", slo_scales=slo_scales),
+        "spatial": simulate(sp_pl, wl, mode="spatial", policy="adbs",
+                            slo_scales=slo_scales),
+        "temporal": simulate(mux_pl, wl, mode="temporal", policy="fcfs",
+                             slo_scales=slo_scales),
+    }
+
+
+def report_row(tag: str, reports: Dict[str, SimReport]) -> dict:
+    row = {"tag": tag}
+    for k, r in reports.items():
+        row[k] = {
+            "throughput": r.throughput,
+            "rate_weighted_tpt": r.rate_weighted_tpt,
+            "slo": r.slo_attainment,
+            "p99_latency": r.p99_latency,
+            "p99_ttft": r.p99_ttft,
+            "p99_tpot": r.p99_tpot,
+            "finished": r.finished,
+            "submitted": r.submitted,
+        }
+    return row
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

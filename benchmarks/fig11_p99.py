@@ -1,0 +1,46 @@
+"""Appendix A.1 (Fig. 11): P99 average / TPOT / TTFT latency of the
+three multiplexing approaches on the synthetic workloads.
+
+Paper bands: MuxServe's P99 average latency below both baselines; P99
+TPOT slightly above spatial (interference) but far below temporal; P99
+TTFT below both (queuing time dominates, which colocation removes).
+"""
+from __future__ import annotations
+
+from repro.core.workload import power_law_rates
+
+from benchmarks.common import paper_models, save, three_systems, \
+    workload_for
+
+ALPHAS = [0.7, 2.1]
+N_DEVICES = 32
+
+
+def run(quick: bool = False) -> dict:
+    models = paper_models()
+    rows = []
+    for alpha in (ALPHAS[:1] if quick else ALPHAS):
+        rates = power_law_rates([m.name for m in models], alpha, 20.0)
+        models_rates = [(m, rates[m.name]) for m in models]
+        wl = workload_for(models, alpha, 20.0, 30.0, seed=0)
+        reps = three_systems(models_rates, wl, N_DEVICES)
+        row = {"alpha": alpha}
+        for name, r in reps.items():
+            row[name] = {"p99_latency": r.p99_latency,
+                         "p99_ttft": r.p99_ttft,
+                         "p99_tpot": r.p99_tpot}
+        rows.append(row)
+        mx, sp, tp = reps["muxserve"], reps["spatial"], reps["temporal"]
+        print(f"[fig11] α={alpha}: p99 latency mux {mx.p99_latency:.1f}s "
+              f"vs spatial {sp.p99_latency:.1f}s / temporal "
+              f"{tp.p99_latency:.1f}s | p99 TTFT {mx.p99_ttft:.2f} vs "
+              f"{sp.p99_ttft:.2f}/{tp.p99_ttft:.2f} | p99 TPOT(ms) "
+              f"{mx.p99_tpot * 1e3:.0f} vs {sp.p99_tpot * 1e3:.0f}/"
+              f"{tp.p99_tpot * 1e3:.0f}")
+    out = {"rows": rows}
+    save("fig11_p99", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Fig. 3: batch inference latency vs compute fraction (LLaMA-7B).
+
+The paper's motivating observation: decode latency is flat as the SM
+fraction shrinks (memory-bound), prefill scales ~1/f (compute-bound).
+Our TPU cost model must reproduce the shape — this is the property the
+ADBS colocation win rests on.
+"""
+from __future__ import annotations
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import A100, TPU_V5E
+from repro.core.workload import llama_config
+
+from benchmarks.common import save
+
+FRACTIONS = [0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+
+
+def run() -> dict:
+    cfg = llama_config("llama-7b")
+    out = {"fractions": FRACTIONS, "hw": {}}
+    for hw in (A100, TPU_V5E):
+        prefill = [cm.prefill_latency(cfg, 1, 128, f=f, hw=hw)
+                   for f in FRACTIONS]
+        decode = [cm.decode_latency(cfg, 32, 400, f=f, hw=hw)
+                  for f in FRACTIONS]
+        # relative to f=1.0 (the paper plots relative latency)
+        out["hw"][hw.name] = {
+            "prefill_rel": [p / prefill[-1] for p in prefill],
+            "decode_rel": [d / decode[-1] for d in decode],
+        }
+        print(f"[fig3] {hw.name}: prefill 0.3→1.0 rel "
+              f"{prefill[0] / prefill[-1]:.2f}×, decode "
+              f"{decode[0] / decode[-1]:.2f}×")
+    save("fig3_compute_fraction", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks (CSV): wall time of the XLA reference path
+and the Pallas kernels in interpret mode (correctness-path timing on
+CPU — TPU timings require hardware; the dry-run covers the lowering).
+
+Prints ``name,us_per_call,derived`` rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.mamba2 import ssd_chunked
+from repro.serving import cache_ops
+
+
+def _time(fn, *args, n=5) -> float:
+    fn(*args)                      # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = False) -> dict:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash prefill (XLA oracle path at a serving-ish shape)
+    b, s, h, hd = 1, 1024, 8, 64
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    t_ref = _time(jax.jit(ref.flash_prefill_ref), q, k, v)
+    rows.append(("flash_prefill_xla_ref", t_ref,
+                 f"b{b}s{s}h{h}d{hd}"))
+    t_pl = _time(lambda *a: flash_prefill(*a, block_q=256, block_k=256,
+                                          interpret=True), q, k, v, n=1)
+    rows.append(("flash_prefill_pallas_interp", t_pl, "interpret=True"))
+
+    # paged decode attention
+    bt, nb, kv = 16, 8, 2
+    group = 1 * kv
+    pool_k = jax.random.normal(key, (nb * group * 4, bt, hd), jnp.float32)
+    pool_v = jax.random.normal(key, (nb * group * 4, bt, hd), jnp.float32)
+    qd = jax.random.normal(key, (4, h, hd), jnp.float32)
+    table = jnp.arange(4 * nb, dtype=jnp.int32).reshape(4, nb) * group
+    lens = jnp.full((4,), nb * bt, jnp.int32)
+    t_ref = _time(jax.jit(lambda *a: cache_ops.paged_decode_attention(
+        *a, 0, kv)), qd, pool_k, pool_v, table, lens)
+    rows.append(("paged_decode_xla_ref", t_ref, f"b4 blocks{nb} bt{bt}"))
+    t_pl = _time(lambda *a: paged_decode_attention(
+        *a, 0, n_kv=kv, interpret=True), qd, pool_k, pool_v, table, lens,
+        n=1)
+    rows.append(("paged_decode_pallas_interp", t_pl, "interpret=True"))
+
+    # SSD scan
+    b2, s2, h2, p2, n2 = 1, 512, 4, 64, 64
+    x = jax.random.normal(key, (b2, s2, h2, p2), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (b2, s2, h2))) * 0.1
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h2))
+    B = jax.random.normal(key, (b2, s2, 1, n2), jnp.float32)
+    C = jax.random.normal(key, (b2, s2, 1, n2), jnp.float32)
+    d_skip = jnp.ones((h2,))
+    t_ref = _time(jax.jit(lambda *a: ssd_chunked(*a, 128)), x, dt, a_log,
+                  B, C, d_skip)
+    rows.append(("ssd_scan_xla_ref", t_ref, f"s{s2}h{h2}p{p2}n{n2}"))
+    t_pl = _time(lambda *a: ssd_scan(*a, chunk=128, interpret=True), x,
+                 dt, a_log, B, C, d_skip, n=1)
+    rows.append(("ssd_scan_pallas_interp", t_pl, "interpret=True"))
+
+    print("name,us_per_call,derived")
+    for name, us, extra in rows:
+        print(f"{name},{us:.1f},{extra}")
+    from benchmarks.common import save
+    save("kernel_bench", {"rows": [
+        {"name": n, "us": u, "derived": d} for n, u, d in rows]})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

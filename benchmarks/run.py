@@ -1,0 +1,56 @@
+"""Run every benchmark harness (one per paper table/figure) and the
+roofline report.  ``--quick`` trims sweeps for CI-speed runs.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_compute_fraction, fig5_synthetic,
+                            fig7_real, fig8_placement, fig9_adbs,
+                            fig10_manager, fig11_p99, kernel_bench,
+                            roofline)
+    jobs = [
+        ("fig3_compute_fraction", lambda: fig3_compute_fraction.run()),
+        ("fig5_synthetic", lambda: fig5_synthetic.run(args.quick)),
+        ("fig7_real", lambda: fig7_real.run(args.quick)),
+        ("fig8_placement", lambda: fig8_placement.run(args.quick)),
+        ("fig9_adbs", lambda: fig9_adbs.run(args.quick)),
+        ("fig10_manager", lambda: fig10_manager.run(args.quick)),
+        ("fig11_p99", lambda: fig11_p99.run(args.quick)),
+        ("kernel_bench", lambda: kernel_bench.run(args.quick)),
+        ("roofline_16x16", lambda: roofline.run("16x16")),
+        ("roofline_2x16x16", lambda: roofline.run("2x16x16")),
+    ]
+    failures = []
+    for name, fn in jobs:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception:                                 # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print("\nall benchmarks completed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Assigned architecture configs (one module per architecture).
+
+Every config cites its source in ``ModelConfig.source``.  Use
+``repro.configs.get(name)`` or ``repro.models.registry``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "musicgen_medium",
+    "qwen2_7b",
+    "granite_moe_3b_a800m",
+    "zamba2_1p2b",
+    "qwen3_14b",
+    "phi_3_vision_4p2b",
+    "command_r_plus_104b",
+    "mamba2_2p7b",
+    "qwen3_moe_235b_a22b",
+    "deepseek_coder_33b",
+]
+
+# canonical dashed ids (as given in the assignment) → module names
+ALIASES = {
+    "musicgen-medium": "musicgen_medium",
+    "qwen2-7b": "qwen2_7b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen3-14b": "qwen3_14b",
+    "phi-3-vision-4.2b": "phi_3_vision_4p2b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+}
+
+
+def get(name: str) -> ModelConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    """Reduced variant of the same family for CPU smoke tests."""
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}

@@ -1,0 +1,147 @@
+"""Workload generation (paper §4.1–4.2).
+
+Synthetic workloads: per-LLM request rates from a power-law with
+exponent α (larger α → fewer LLMs take more traffic; α=0.9 ≈ 20% of
+LLMs get 50% of traffic, α=2.1 ≈ 20% get 90%), arrival times from
+Poisson processes, request lengths from a ShareGPT-like distribution
+(mean prompt 161 tokens, mean output 338 — paper §2.1).
+
+The model mix follows Table 1: {4–8B: 12, 8–21B: 4, 21–41B: 2,
+41–70B: 1} LLaMA-family models.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# LLaMA-family size buckets (paper Table 1)
+# ---------------------------------------------------------------------------
+_LLAMA_SHAPES = {
+    # name: (layers, d_model, heads, kv_heads, d_ff)
+    "llama-7b": (32, 4096, 32, 32, 11008),
+    "llama-13b": (40, 5120, 40, 40, 13824),
+    "llama-30b": (60, 6656, 52, 52, 17920),
+    "llama-65b": (80, 8192, 64, 64, 22016),
+}
+
+TABLE1_MIX: List[Tuple[str, int]] = [
+    ("llama-7b", 12), ("llama-13b", 4), ("llama-30b", 2), ("llama-65b", 1),
+]
+
+
+def llama_config(name: str, tag: str = "") -> ModelConfig:
+    l, d, h, kv, f = _LLAMA_SHAPES[name]
+    return ModelConfig(
+        name=f"{name}{tag}", family="dense", n_layers=l, d_model=d,
+        n_heads=h, n_kv_heads=kv, d_ff=f, vocab_size=32000,
+        source="arXiv:2302.13971 (LLaMA)")
+
+
+def table1_models() -> List[ModelConfig]:
+    out = []
+    for name, count in TABLE1_MIX:
+        for i in range(count):
+            out.append(llama_config(name, tag=f"-{i}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# request-level workload
+# ---------------------------------------------------------------------------
+@dataclass
+class RequestSpec:
+    model: str
+    arrival: float
+    prompt_len: int
+    output_len: int
+
+
+@dataclass
+class Workload:
+    """A trace: per-model rates + a flat arrival-ordered request list."""
+    rates: Dict[str, float]                     # req/s per model
+    requests: List[RequestSpec] = field(default_factory=list)
+    horizon: float = 0.0
+
+    @property
+    def total_rate(self) -> float:
+        return sum(self.rates.values())
+
+    def per_model(self) -> Dict[str, List[RequestSpec]]:
+        out: Dict[str, List[RequestSpec]] = {m: [] for m in self.rates}
+        for r in self.requests:
+            out[r.model].append(r)
+        return out
+
+
+def power_law_rates(models: Sequence[str], alpha: float, max_rate: float,
+                    scale_to_avg: Optional[float] = None) -> Dict[str, float]:
+    """Rate_i ∝ (i+1)^(−α), scaled so max = max_rate (paper §4.2) or so
+    the mean equals ``scale_to_avg`` when given."""
+    n = len(models)
+    raw = np.array([(i + 1.0) ** (-alpha) for i in range(n)])
+    rates = raw / raw.max() * max_rate
+    if scale_to_avg is not None:
+        rates = rates / rates.mean() * scale_to_avg
+    return {m: float(r) for m, r in zip(models, rates)}
+
+
+def sharegpt_lengths(rng: np.random.Generator, n: int,
+                     mean_prompt: int = 161, mean_output: int = 338
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Lognormal lengths matched to ShareGPT means (σ chosen to mimic
+    its heavy tail), clipped to [4, 2048]."""
+    def ln(mean, sigma):
+        mu = math.log(mean) - sigma ** 2 / 2
+        return np.clip(rng.lognormal(mu, sigma, n).astype(int), 4, 2048)
+    return ln(mean_prompt, 0.9), ln(mean_output, 0.8)
+
+
+def synthesize(models: Sequence[str], alpha: float, max_rate: float,
+               horizon: float, seed: int = 0,
+               scale_to_avg: Optional[float] = None) -> Workload:
+    """Poisson arrivals per model at power-law rates over ``horizon`` s."""
+    rng = np.random.default_rng(seed)
+    rates = power_law_rates(models, alpha, max_rate, scale_to_avg)
+    reqs: List[RequestSpec] = []
+    for m, rate in rates.items():
+        if rate <= 0:
+            continue
+        n_exp = rng.poisson(rate * horizon)
+        times = np.sort(rng.uniform(0, horizon, n_exp))
+        pl, ol = sharegpt_lengths(rng, n_exp)
+        reqs.extend(RequestSpec(m, float(t), int(p), int(o))
+                    for t, p, o in zip(times, pl, ol))
+    reqs.sort(key=lambda r: r.arrival)
+    return Workload(rates=rates, requests=reqs, horizon=horizon)
+
+
+def cumulative_rate_distribution(rates: Dict[str, float]) -> np.ndarray:
+    """Fig. 6: cumulative share of traffic of the top-k LLMs."""
+    vals = np.sort(np.array(list(rates.values())))[::-1]
+    return np.cumsum(vals) / vals.sum()
+
+
+def chatlmsys_like(n_models: int = 16, horizon: float = 600.0,
+                   avg_rate: float = 4.8, seed: int = 0) -> Workload:
+    """Real-workload stand-in (§4.3): 16 LLMs where ~20% of the models
+    receive ~50% of the traffic (α≈0.9), rates rescaled to ``avg_rate``,
+    with mild sinusoidal non-stationarity like the ChatLMSYS trace."""
+    rng = np.random.default_rng(seed)
+    models = [f"llm-{i}" for i in range(n_models)]
+    wl = synthesize(models, alpha=0.9, max_rate=avg_rate * 3,
+                    horizon=horizon, seed=seed, scale_to_avg=avg_rate)
+    # modulate arrivals with a slow daily-ish wave (thinning)
+    kept = []
+    for r in wl.requests:
+        p = 0.75 + 0.25 * math.sin(2 * math.pi * r.arrival / horizon)
+        if rng.uniform() < p:
+            kept.append(r)
+    wl.requests = kept
+    return wl

@@ -1,0 +1,45 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+``backend="pallas"`` targets TPU (or ``interpret=True`` on CPU for
+validation); ``backend="xla"`` routes to the pure-jnp reference path —
+used by the dry-run lowering (Pallas TPU kernels cannot lower for the
+CPU-host placeholder devices) and by the CPU engine.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, window=None, backend: str = "auto",
+                    block_q: int = 256, block_k: int = 512):
+    if backend == "xla" or (backend == "auto" and not _ON_TPU):
+        from repro.models.layers import blocked_causal_attention
+        return blocked_causal_attention(q, k, v, window=window)
+    interpret = backend == "interpret" or not _ON_TPU
+    return _fp.flash_prefill(q, k, v, window=window, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+
+
+def paged_attention(q, pool_k, pool_v, table, seq_lens, layer, *, n_kv,
+                    backend: str = "auto"):
+    if backend == "xla" or (backend == "auto" and not _ON_TPU):
+        return _ref.paged_decode_ref(q, pool_k, pool_v, table, seq_lens,
+                                     layer, n_kv=n_kv)
+    interpret = backend == "interpret" or not _ON_TPU
+    return _pa.paged_decode_attention(q, pool_k, pool_v, table, seq_lens,
+                                      layer, n_kv=n_kv, interpret=interpret)
+
+
+def ssd(x, dt, a_log, B, C, d_skip, *, chunk=256, backend: str = "auto"):
+    if backend == "xla" or (backend == "auto" and not _ON_TPU):
+        return _ref.ssd_scan_ref(x, dt, a_log, B, C, d_skip, chunk=chunk)
+    interpret = backend == "interpret" or not _ON_TPU
+    return _ssd.ssd_scan(x, dt, a_log, B, C, d_skip, chunk=chunk,
+                         interpret=interpret)

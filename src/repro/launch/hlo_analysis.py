@@ -1,0 +1,344 @@
+"""Trip-count-aware FLOP / byte / collective analysis of optimized HLO.
+
+``compiled.cost_analysis()`` counts a ``while`` body once regardless of
+its trip count (measured: a 2-layer and an 8-layer scan report the same
+FLOPs), which breaks the roofline for scan-over-layers models.  This
+module re-derives the counts from ``compiled.as_text()``:
+
+  * builds a per-computation instruction table (name → dtype/shape/op),
+  * resolves ``while`` trip counts from the loop condition's
+    ``compare(counter, constant)``,
+  * FLOPs: 2·|out|·|contracted| for every dot (incl. inside fusions),
+    multiplied through the call tree (fusion × 1, while × trip);
+  * bytes: per *top-level* instruction of each computation, operand +
+    result bytes (post-fusion HLO ⇒ ≈ one read per operand, one write
+    per result), whiles multiplied by trip count;
+  * collectives: ring-model traffic per device, × trip count when the
+    collective sits in a loop body.
+
+Shapes in post-SPMD HLO are already per-device, so everything here is
+per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "s4": 0.5, "s8": 1, "s16": 2, "s32": 4,
+    "s64": 8, "u2": 0.25, "u4": 0.5, "u8": 1, "u16": 2, "u32": 4,
+    "u64": 8, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "f16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_NAME = re.compile(r"^\(?[\w\[\],{}\s/*]*?\)?\s*([a-z][\w\-]*)\(")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLS = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclass
+class Instr:
+    name: str
+    rhs: str
+    op: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]   # result type(s)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+def _result_shapes(rhs: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    head = rhs.split("(", 1)[0] if "(" in rhs else rhs
+    out = []
+    for dt, dims in _SHAPE.findall(head):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _operands(rhs: str) -> List[str]:
+    # operand list of the first call parens
+    m = re.search(r"[a-z][\w\-]*\((.*)$", rhs)
+    if not m:
+        return []
+    args = m.group(1)
+    return re.findall(r"%([\w.\-]+)", args.split("),", 1)[0])
+
+
+def _op_of(rhs: str) -> str:
+    # strip result type(s), take the op token before '('
+    after = rhs
+    # drop leading type annotation(s): e.g. "f32[1,2]{1,0} dot(...)"
+    m = re.match(r"^(?:\([^)]*\)|[\w\[\],{}]+)\s+([a-z][\w\-]*)", after)
+    if m:
+        return m.group(1)
+    m = _OP_NAME.search(after)
+    return m.group(1) if m else ""
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s:
+            continue
+        if not s.startswith(" ") and ("->" in s) and s.endswith("{"):
+            m = _COMP_HDR.match(s.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if s.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(s)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        ins = Instr(name=name, rhs=rhs, op=_op_of(rhs),
+                    shapes=_result_shapes(rhs), operands=_operands(rhs))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    if entry and entry != "__entry__":
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.rhs)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.op == "compare":
+            for o in ins.operands:
+                if o in consts:
+                    return max(1, consts[o])
+    # fall back: any constant in the condition
+    return max(1, max(consts.values(), default=1))
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = 1
+    for _, dims in ins.shapes:
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    contracted = 1
+    if m and ins.operands:
+        lhs = comp.by_name.get(ins.operands[0])
+        if lhs and lhs.shapes:
+            dims = lhs.shapes[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(dims):
+                    contracted *= dims[idx]
+    return 2.0 * out_elems * contracted
+
+
+def _called(ins: Instr) -> List[str]:
+    out = []
+    for m in _CALLS.finditer(ins.rhs):
+        for nm in m.group(1).split(","):
+            out.append(nm.strip().lstrip("%"))
+    return out
+
+
+def _called_attrs(ins: Instr) -> Dict[str, List[str]]:
+    """Named computation refs: {'body': [...], 'condition': [...], ...}.
+
+    Comma-separated name lists only occur inside braces (e.g.
+    ``branch_computations={%a, %b}``); unbraced attrs are single names.
+    """
+    out: Dict[str, List[str]] = {}
+    for m in re.finditer(
+            r"(calls|body|condition|to_apply|branch_computations)="
+            r"(?:\{([^}]*)\}|%?([\w.\-]+))", ins.rhs):
+        names = m.group(2) if m.group(2) is not None else m.group(3)
+        out[m.group(1)] = [x.strip().lstrip("%")
+                           for x in names.split(",") if x.strip()]
+    return out
+
+
+def _group_size(rhs: str) -> int:
+    m = _GROUPS.search(rhs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_GROUPS.search(rhs)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _collective_traffic(ins: Instr) -> Tuple[str, float]:
+    kind = next((k for k in COLLECTIVES if ins.op.startswith(k)), None)
+    if kind is None:
+        return "", 0.0
+    r = _nbytes(ins.shapes)
+    n = _group_size(ins.rhs)
+    if kind == "all-gather":
+        t = r * (n - 1) / n
+    elif kind == "all-reduce":
+        t = 2 * r * (n - 1) / n
+    elif kind == "reduce-scatter":
+        t = r * (n - 1)
+    elif kind == "all-to-all":
+        t = r * (n - 1) / n
+    else:
+        t = r
+    return kind, t
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + int(v * mult)
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "conditional", "call", "after-all",
+                   "iota",
+                   # defensive whole-buffer copies the CPU backend
+                   # inserts around loop-carried aliasing; the TPU
+                   # backend aliases these in place (donation), so they
+                   # are excluded from the HBM-traffic model
+                   "copy", "copy-start", "copy-done"}
+
+
+def _analyze_comp(comps, name, cache) -> Costs:
+    if name in cache:
+        return cache[name]
+    comp = comps.get(name)
+    c = Costs()
+    cache[name] = c
+    if comp is None:
+        return c
+    def _operand_bytes(ins: Instr, cap_mult: Optional[float] = None
+                       ) -> float:
+        total = 0.0
+        res = _nbytes(ins.shapes)
+        for o in ins.operands:
+            ref = comp.by_name.get(o)
+            if ref is None:
+                continue
+            b = _nbytes(ref.shapes)
+            if cap_mult is not None:
+                # slicing fusions read only a window of big operands;
+                # cap each operand's counted traffic at cap_mult× the
+                # result (reduction fusions read more than they write,
+                # hence a multiple rather than 1×)
+                b = min(b, cap_mult * max(res, 1.0))
+            total += b
+        return total
+
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            c.flops += _dot_flops(comp, ins)
+            c.bytes += _nbytes(ins.shapes) + _operand_bytes(ins)
+        elif ins.op in ("dynamic-slice", "slice", "gather"):
+            # reads only the slice it produces
+            c.bytes += 2 * _nbytes(ins.shapes)
+        elif ins.op in ("dynamic-update-slice",):
+            # in-place window write: traffic ≈ 2× the update operand
+            upd = comp.by_name.get(ins.operands[1]) if \
+                len(ins.operands) > 1 else None
+            c.bytes += 2 * (_nbytes(upd.shapes) if upd
+                            else _nbytes(ins.shapes))
+        elif ins.op == "scatter":
+            upd = comp.by_name.get(ins.operands[2]) if \
+                len(ins.operands) > 2 else None
+            c.bytes += 2 * (_nbytes(upd.shapes) if upd
+                            else _nbytes(ins.shapes))
+        elif ins.op == "while":
+            attrs = _called_attrs(ins)
+            body = (attrs.get("body") or [None])[0]
+            cond = (attrs.get("condition") or [None])[0]
+            trips = _trip_count(comps, cond) if cond else 1
+            if body:
+                c.add(_analyze_comp(comps, body, cache), trips)
+        elif ins.op in ("fusion", "call", "conditional", "map",
+                        "reduce-window", "reduce", "sort",
+                        "custom-call", "select-and-scatter"):
+            # flops of nested dots; bytes at this level (fusion reads
+            # operands once, writes result once; big operands that are
+            # only windowed inside the fusion are capped)
+            for sub in _called(ins):
+                nested = _analyze_comp(comps, sub, cache)
+                c.flops += nested.flops
+                c.coll_bytes += nested.coll_bytes
+                for k, v in nested.coll_by_kind.items():
+                    c.coll_by_kind[k] = c.coll_by_kind.get(k, 0.0) + v
+            c.bytes += _nbytes(ins.shapes) + _operand_bytes(ins,
+                                                            cap_mult=32.0)
+        elif ins.op in _SKIP_BYTES_OPS:
+            continue
+        else:
+            kind, t = _collective_traffic(ins)
+            if kind:
+                c.coll_bytes += t
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + t
+                c.coll_counts[kind] = c.coll_counts.get(kind, 0) + 1
+            c.bytes += _nbytes(ins.shapes) + _operand_bytes(ins)
+    return c
+
+
+def analyze(hlo_text: str) -> Costs:
+    """Per-device Costs for the entry computation of an optimized HLO
+    module (trip-count-aware)."""
+    comps = parse_hlo(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.instrs),
+                    default=None)
+        if entry is None:
+            return Costs()
+        comps["__entry__"] = entry
+    cache: Dict[str, Costs] = {}
+    # avoid self-recursion via the alias
+    return _analyze_comp(comps, entry.name, cache)

@@ -1,0 +1,39 @@
+"""Production mesh construction (TPU v5e target).
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax
+import; smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Trivial 1-device mesh for CPU-scale examples/tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def dp_ways(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def tp_ways(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -1,0 +1,114 @@
+"""Multi-LLM serving driver (CPU-scale, real engines).
+
+Colocates the requested architectures' REDUCED variants on one unified
+KV pool and serves a synthetic Poisson workload with the chosen
+scheduling policy — the end-to-end MuxServe pipeline at laptop scale.
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --archs qwen2-7b,mamba2-2.7b --policy adbs --rate 2.0 \
+      --horizon 10 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models.transformer import init_params
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import UnifiedKVPool
+from repro.serving.mux import MuxScheduler
+from repro.serving.sampling import SamplingConfig
+
+
+def build_unit(archs: List[str], pool_blocks: int = 400_000,
+               max_slots: int = 4, seed: int = 0,
+               chunk_tokens: int = 0):
+    pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32)
+    engines: Dict[str, Engine] = {}
+    for i, a in enumerate(archs):
+        cfg = configs.get_reduced(a)
+        params = init_params(jax.random.PRNGKey(seed + i), cfg,
+                             jnp.float32)
+        view = pool.register_model(cfg, pool_blocks // len(archs))
+        engines[cfg.name] = Engine(cfg, params, view, max_slots=max_slots,
+                                   chunk_tokens=chunk_tokens or None)
+    return engines, pool
+
+
+def synth_requests(engines: Dict[str, Engine], rate: float,
+                   horizon: float, max_new: int, seed: int = 0
+                   ) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    rid = 0
+    for name, eng in engines.items():
+        n = rng.poisson(rate * horizon)
+        times = np.sort(rng.uniform(0, horizon, n))
+        for t in times:
+            plen = int(rng.integers(4, 24))
+            prompt = list(rng.integers(1, eng.cfg.vocab_size, plen))
+            reqs.append(Request(rid, name, prompt, max_new, arrival=float(t)))
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="qwen2-7b,mamba2-2.7b")
+    ap.add_argument("--policy", default="adbs",
+                    choices=["adbs", "fcfs", "round_robin"])
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--horizon", type=float, default=8.0)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked prefill window (0 = whole-prompt jobs)")
+    args = ap.parse_args()
+
+    archs = args.archs.split(",")
+    engines, pool = build_unit(archs, seed=args.seed,
+                               chunk_tokens=args.chunk_tokens)
+    mux = MuxScheduler(engines, pool, policy=args.policy)
+    reqs = synth_requests(engines, args.rate, args.horizon, args.max_new,
+                          args.seed)
+    print(f"[serve] {len(reqs)} requests for {len(archs)} colocated LLMs, "
+          f"policy={args.policy}")
+
+    t0 = time.perf_counter()
+    idx = 0
+    while idx < len(reqs) or mux.pending():
+        now = time.perf_counter() - t0
+        while idx < len(reqs) and reqs[idx].arrival <= now:
+            mux.submit(reqs[idx])
+            idx += 1
+        if mux.pending():
+            mux.tick()
+        elif idx < len(reqs):
+            time.sleep(min(0.01, reqs[idx].arrival - now))
+    wall = time.perf_counter() - t0
+
+    st = mux.stats
+    lat = [r.finish - (t0 + r.arrival) for r in st.finished if r.finish > 0]
+    print(f"[serve] finished {len(st.finished)}/{len(reqs)} in {wall:.1f}s "
+          f"→ {len(st.finished) / wall:.2f} req/s, "
+          f"{(st.prefill_tokens + st.decode_tokens) / wall:.0f} tok/s")
+    if lat:
+        print(f"[serve] latency p50={np.percentile(lat, 50):.2f}s "
+              f"p99={np.percentile(lat, 99):.2f}s")
+    print(f"[serve] pool utilization peak-free={pool.allocator.free_blocks}"
+          f"/{pool.n_head_blocks}, fragmentation="
+          f"{pool.allocator.fragmentation():.3f}")
+    for name, view in pool.views.items():
+        print(f"[serve]   {name}: quota={view.quota} used={view.used}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,180 @@
+"""PartitionSpec rules for every architecture family.
+
+Weight layout (GSPMD / pjit):
+  * tensor-parallel dims (heads, d_ff, experts, vocab) on ``model``;
+  * the d_model dim of matrices additionally on ``data`` (FSDP-style —
+    weights are gathered per layer inside the scan; for a 104B model
+    this is what makes 16 GiB/chip feasible);
+  * replicated across ``pod`` (data parallelism over DCN).
+
+Attention-head geometry is padded first (``physical_config``) so the
+head dims divide the ``model`` axis exactly: kv heads are replicated
+``tp/gcd(kv,tp)``× and q heads padded to a multiple.  The padding is
+real compute/memory waste, surfaced in the roofline useful-FLOPs ratio.
+
+Optimizer state (AdamW m/v) shards exactly like its parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, tp_geometry
+
+Pytree = Any
+
+
+def physical_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad head counts so attention shards exactly ``tp`` ways."""
+    if cfg.family == "ssm" or cfg.n_heads == 0:
+        return cfg
+    hd = cfg.hd
+    g = tp_geometry(cfg.n_heads, cfg.n_kv_heads, tp)
+    if g.h_padded == cfg.n_heads and g.kv_padded == cfg.n_kv_heads:
+        return cfg
+    return dataclasses.replace(cfg, n_heads=g.h_padded,
+                               n_kv_heads=g.kv_padded, head_dim=hd)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf rules
+# ---------------------------------------------------------------------------
+def _leaf_spec(path: str, leaf, *, fsdp: bool) -> P:
+    """PartitionSpec for one param leaf, keyed by name + rank."""
+    d = "data" if fsdp else None
+    name = path.split("/")[-1]
+    nd = leaf.ndim
+
+    # quantized serving tree (serving/quantize.py): int8 weights keep
+    # the base weight's spec; scales have singleton middle dims
+    if name.endswith("_q"):
+        name = name[:-2]
+        if name == "embed":
+            return P("model", d)
+        if name == "lm_head":
+            return P(d, "model")
+    elif name.endswith("_s"):
+        base = _leaf_spec(path[:-2], leaf, fsdp=fsdp)
+        return P(*[a if leaf.shape[i] > 1 else None
+                   for i, a in enumerate(base)])
+
+    if name == "embed":                       # [V, d]
+        return P("model", d)
+    if name == "lm_head":                     # [d, V]
+        return P(d, "model")
+    if name in ("out_norm",):
+        return P(None)
+
+    if name in ("wq", "wk", "wv"):            # [L, d, heads*hd]
+        return P(None, d, "model")
+    if name == "wo":                          # [L, heads*hd, d]
+        return P(None, "model", d)
+    if name in ("bq", "bk", "bv"):            # [L, heads*hd]
+        return P(None, "model")
+    if name in ("q_norm", "k_norm"):          # [L, hd]
+        return P(None, None)
+
+    if name in ("w_gate", "w_up"):
+        if nd == 4:                           # MoE [L, E, d, fe]
+            return P(None, "model", d, None)
+        return P(None, d, "model")            # dense [L, d, f]
+    if name == "w_down":
+        if nd == 4:                           # MoE [L, E, fe, d]
+            return P(None, "model", None, d)
+        return P(None, "model", d)            # dense [L, f, d]
+    if name == "router":                      # [L, d, E]
+        return P(None, d, None)
+
+    # --- Mamba2: SSD runs head-parallel on the model axis (§Perf);
+    # out_proj rows follow the head-sharded d_inner, in_proj's output
+    # dim stays unsharded (mixed z/x/B/C/dt segments)
+    if name == "in_proj":                     # [L, d, d_in_proj]
+        return P(None, d, None)
+    if name == "out_proj":                    # [L, di, d]
+        return P(None, "model", d)
+    if name in ("conv_w", "conv_b", "a_log", "dt_bias", "d_skip", "gnorm"):
+        return P(*([None] * nd))
+
+    if name in ("ln1", "ln2"):                # [L, d]
+        return P(None, None)
+    # fallback: replicate
+    return P(*([None] * nd))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Pytree, *, fsdp: bool = True,
+                attn_tp: bool = True) -> Pytree:
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    ``attn_tp=False`` drops the model axis from attention weights
+    (data-parallel attention for MoE-EP layouts — §Perf)."""
+    attn_names = {"wq", "wk", "wv", "wo", "bq", "bk", "bv"}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for p, l in flat:
+        spec = _leaf_spec(_path_str(p), l, fsdp=fsdp)
+        name = _path_str(p).split("/")[-1]
+        if name.endswith(("_q", "_s")):
+            name = name[:-2]
+        if not attn_tp and name in attn_names:
+            spec = P(*[a if a != "model" else None for a in spec])
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(pspecs: Pytree, opt_state_shape) -> Any:
+    """AdamWState specs: step replicated, m/v like params."""
+    from repro.train.optimizer import AdamWState
+    return AdamWState(step=P(), m=pspecs, v=jax.tree.map(lambda s: s,
+                                                         pspecs))
+
+
+def named(mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation / cache specs
+# ---------------------------------------------------------------------------
+def batch_spec(mesh, batch: int) -> P:
+    """Shard the batch dim over (pod, data) when divisible (long_500k's
+    batch=1 stays replicated — the data axis is idle, which the
+    roofline table reports honestly)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    ways = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % ways == 0:
+        return P(tuple(axes))
+    return P(None)
+
+
+def token_specs(mesh, batch: int):
+    return P(*batch_spec(mesh, batch)), None
+
+
+def kv_cache_spec(mesh, batch: int) -> P:
+    """[L, B, S, KV, hd]: batch over (pod,data), kv heads over model."""
+    b = batch_spec(mesh, batch)
+    return P(None, b[0] if len(b) else None, None, "model", None)
+
+
+def ssm_state_spec(mesh, batch: int) -> P:
+    """[L, B, H, P, N]: batch over (pod,data), heads over model."""
+    b = batch_spec(mesh, batch)
+    return P(None, b[0] if len(b) else None, "model", None, None)
+
+
+def conv_tail_spec(mesh, batch: int) -> P:
+    """[L, B, K-1, conv_dim]: batch over (pod,data)."""
+    b = batch_spec(mesh, batch)
+    return P(None, b[0] if len(b) else None, None, None)

@@ -1,0 +1,257 @@
+"""Input specs + sharding plans for every (arch × input-shape) pair.
+
+``build_lowering(arch, shape, mesh)`` returns everything ``dryrun.py``
+needs to ``jax.jit(step).lower(...)``: the step function, abstract
+ShapeDtypeStruct arguments (weak-type-correct, no device allocation),
+and the matching in_shardings.
+
+Conventions:
+  * audio/vlm shapes: ``tokens`` covers ``seq_len − n_prefix`` positions
+    and the modality stub supplies ``prefix_emb`` for the rest, so the
+    total context is exactly the assigned seq_len (and stays divisible
+    by the flash block sizes).
+  * decode shapes carry a cache of ``seq_len`` context and process ONE
+    token (lens = seq_len, new token at position seq_len−1).
+  * long_500k lowers the windowed/SSM decode path; pure full-attention
+    archs without a windowed variant are skipped (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.config import ModelConfig, SHAPES, ShapeConfig
+from repro.launch import sharding as shd
+from repro.launch import steps
+from repro.models.transformer import init_params
+from repro.train.optimizer import AdamWConfig, AdamWState, init_state
+from repro.train.train_step import make_train_step
+
+BF16 = jnp.bfloat16
+
+# archs that run long_500k and the mechanism they use (DESIGN.md §4)
+LONG_CTX_MODE: Dict[str, str] = {
+    "mamba2-2.7b": "ssm",
+    "zamba2-1.2b": "hybrid-windowed",
+    "musicgen-medium": "windowed",
+    "qwen2-7b": "windowed",
+}
+
+SKIP_LONG = ("full-attention arch without a windowed variant at 500k "
+             "context (DESIGN.md §4: long_500k requires sub-quadratic "
+             "attention)")
+
+
+@dataclass
+class Lowering:
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode
+    step_fn: Callable
+    args: Tuple                     # ShapeDtypeStructs
+    in_specs: Tuple                 # PartitionSpec pytrees (match args)
+    donate: Tuple[int, ...] = ()
+    cfg: Optional[ModelConfig] = None
+    skip: Optional[str] = None      # reason, when not lowered
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(partial(init_params, cfg=cfg, dtype=BF16),
+                          jax.random.PRNGKey(0))
+
+
+def _n_attn_cache_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def _prefix(cfg: ModelConfig, batch: int):
+    if cfg.frontend_dim:
+        return _sds((batch, cfg.n_prefix_tokens, cfg.frontend_dim),
+                    jnp.float32)
+    return None
+
+
+# ---------------------------------------------------------------------------
+def build_quantized_decode(arch: str, shape_name: str, mesh) -> Lowering:
+    """§Perf variant: W8/KV8 decode with model-axis-only weight
+    sharding (dense/moe/vlm/audio, full-cache decode shapes)."""
+    from repro.serving.quantize import quantize_params
+    shape = SHAPES[shape_name]
+    logical = configs.get(arch)
+    tp = mesh.shape["model"]
+    cfg = shd.physical_config(logical, tp)
+    assert shape.kind == "decode" and cfg.family in ("dense", "moe",
+                                                     "vlm", "audio")
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(mesh, B)
+    b0 = bspec[0] if len(bspec) else None
+    qshapes = jax.eval_shape(quantize_params, param_shapes(cfg))
+    # int8 weights usually fit model-sharded (no FSDP gathers); the
+    # 235B MoE still needs the data dim even at int8 (14.7 GiB/chip)
+    fsdp = cfg.weight_bytes() / 2 / tp > 10 * 2 ** 30
+    pspecs = shd.param_specs(qshapes, fsdp=fsdp)
+    hd, KV, La = cfg.hd, cfg.n_kv_heads, cfg.n_layers
+    step = steps.make_decode_step_w8kv8(cfg)
+    kv_spec = P(None, b0, None, "model", None)
+    sc_spec = P(None, b0, None, "model")
+    args = (qshapes,
+            _sds((La, B, S, KV, hd), jnp.int8),
+            _sds((La, B, S, KV, hd), jnp.int8),
+            _sds((La, B, S, KV), jnp.float32),
+            _sds((La, B, S, KV), jnp.float32),
+            _sds((B,), jnp.int32), _sds((B,), jnp.int32))
+    ins = (pspecs, kv_spec, kv_spec, sc_spec, sc_spec, P(b0), P(b0))
+    return Lowering(arch, shape_name, "decode", step, args, ins,
+                    donate=(1, 2, 3, 4), cfg=cfg)
+
+
+def build_lowering(arch: str, shape_name: str, mesh) -> Lowering:
+    shape = SHAPES[shape_name]
+    logical = configs.get(arch)
+    tp = mesh.shape["model"]
+    cfg = shd.physical_config(logical, tp)
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(mesh, B)
+    b0 = bspec[0] if len(bspec) else None
+    # serving shapes drop the FSDP data-dim weight sharding when the
+    # model-sharded weights fit comfortably — FSDP at inference means a
+    # per-layer weight all-gather every step (§Perf: mamba2 prefill
+    # 12.7 GiB/step of gathers removed; a decode step pays it per token)
+    fsdp = shape.kind == "train" or \
+        cfg.weight_bytes() / tp > 5 * 2 ** 30
+    pspecs = shd.param_specs(param_shapes(cfg), fsdp=fsdp)
+
+    if shape.kind == "decode" and shape_name == "long_500k" \
+            and arch not in LONG_CTX_MODE:
+        return Lowering(arch, shape_name, "decode", None, (), (),
+                        cfg=cfg, skip=SKIP_LONG)
+
+    # ---------------- train -------------------------------------------
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        # microbatch the giants so activations fit 16 GiB/chip even
+        # under the CPU backend's bf16→f32 normalization inflation;
+        # top-k=8 MoE gets a floor of 2 (slot expansion is 8× tokens)
+        n_params = cfg.param_count()
+        if n_params > 150e9:
+            micro = 8      # §Perf: 16→8 cuts per-step weight-gather
+            #              traffic 16% at +3 GiB reported temp
+        elif n_params > 60e9:
+            micro = 8
+        elif n_params > 25e9 or (cfg.moe and cfg.moe.top_k >= 8):
+            micro = 2
+        else:
+            micro = 1
+        step = make_train_step(cfg, opt, remat=True, microbatches=micro)
+        params = param_shapes(cfg)
+        opt_state = jax.eval_shape(init_state, params)
+        ospecs = AdamWState(step=P(), m=pspecs, v=pspecs)
+        n_pre = cfg.n_prefix_tokens if cfg.frontend_dim else 0
+        s_tok = S - n_pre
+        args = [params, opt_state,
+                _sds((B, s_tok), jnp.int32), _sds((B, s_tok), jnp.int32)]
+        ins = [pspecs, ospecs, P(b0, None), P(b0, None)]
+        if cfg.frontend_dim:
+            args.append(_prefix(cfg, B))
+            ins.append(P(b0, None, None))
+        return Lowering(arch, shape_name, "train", step, tuple(args),
+                        tuple(ins), donate=(0, 1), cfg=cfg)
+
+    # ---------------- prefill -----------------------------------------
+    if shape.kind == "prefill":
+        step = steps.make_prefill_step(cfg)
+        params = param_shapes(cfg)
+        n_pre = cfg.n_prefix_tokens if cfg.frontend_dim else 0
+        s_tok = S - n_pre
+        args = [params, _sds((B, s_tok), jnp.int32), _sds((B,), jnp.int32)]
+        ins = [pspecs, P(b0, None), P(b0)]
+        if cfg.frontend_dim:
+            args.append(_prefix(cfg, B))
+            ins.append(P(b0, None, None))
+        return Lowering(arch, shape_name, "prefill", step, tuple(args),
+                        tuple(ins), cfg=cfg)
+
+    # ---------------- decode ------------------------------------------
+    windowed = shape_name == "long_500k" and \
+        LONG_CTX_MODE.get(arch, "").endswith("windowed")
+    fam = cfg.family
+    hd, KV = cfg.hd, cfg.n_kv_heads
+    La = _n_attn_cache_layers(cfg)
+    kv_spec = P(None, b0, None, "model", None)
+    w_spec = P(None, b0, "model", None, None)
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        step = steps.make_decode_step(cfg, windowed=windowed)
+        params = param_shapes(cfg)
+        if windowed:
+            W = cfg.sliding_window
+            caches = [_sds((La, B, KV, W, hd), BF16),
+                      _sds((La, B, KV, W, hd), BF16)]
+            cspecs = [w_spec, w_spec]
+        else:
+            caches = [_sds((La, B, S, KV, hd), BF16),
+                      _sds((La, B, S, KV, hd), BF16)]
+            cspecs = [kv_spec, kv_spec]
+        args = [params, *caches, _sds((B,), jnp.int32), _sds((B,), jnp.int32)]
+        ins = [pspecs, *cspecs, P(b0), P(b0)]
+        return Lowering(arch, shape_name, "decode", step, tuple(args),
+                        tuple(ins), donate=(1, 2), cfg=cfg)
+
+    if fam == "ssm":
+        step = steps.make_decode_step(cfg)
+        params = param_shapes(cfg)
+        sc = cfg.ssm
+        conv_dim = cfg.d_inner + 2 * sc.n_groups * sc.d_state
+        st = _sds((cfg.n_layers, B, cfg.n_ssm_heads, sc.head_dim,
+                   sc.d_state), jnp.float32)
+        tail = _sds((cfg.n_layers, B, sc.conv_kernel - 1, conv_dim), BF16)
+        args = [params, st, tail, _sds((B,), jnp.int32),
+                _sds((B,), jnp.int32)]
+        ins = [pspecs, shd.ssm_state_spec(mesh, B),
+               shd.conv_tail_spec(mesh, B), P(b0), P(b0)]
+        return Lowering(arch, shape_name, "decode", step, tuple(args),
+                        tuple(ins), donate=(1, 2), cfg=cfg)
+
+    if fam == "hybrid":
+        step = steps.make_decode_step(cfg, windowed=windowed)
+        params = param_shapes(cfg)
+        sc = cfg.ssm
+        conv_dim = cfg.d_inner + 2 * sc.n_groups * sc.d_state
+        st = _sds((cfg.n_layers, B, cfg.n_ssm_heads, sc.head_dim,
+                   sc.d_state), jnp.float32)
+        tail = _sds((cfg.n_layers, B, sc.conv_kernel - 1, conv_dim), BF16)
+        if windowed:
+            W = cfg.sliding_window
+            ck = _sds((La, B, KV, W, hd), BF16)
+            cspec = w_spec
+        else:
+            ck = _sds((La, B, S, KV, hd), BF16)
+            cspec = kv_spec
+        args = [params, st, tail, ck, ck, _sds((B,), jnp.int32),
+                _sds((B,), jnp.int32)]
+        ins = [pspecs, shd.ssm_state_spec(mesh, B),
+               shd.conv_tail_spec(mesh, B), cspec, cspec, P(b0), P(b0)]
+        return Lowering(arch, shape_name, "decode", step, tuple(args),
+                        tuple(ins), donate=(1, 2, 3, 4), cfg=cfg)
+
+    raise ValueError(fam)
+
+
+def all_pairs():
+    for arch in configs.ARCH_IDS:
+        dashed = {v: k for k, v in configs.ALIASES.items()}[arch]
+        for shape in SHAPES:
+            yield dashed, shape

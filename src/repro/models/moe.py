@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch.
+
+Top-k routing with a static per-expert capacity (tokens beyond capacity
+are dropped — standard Switch/GShard semantics).  The dispatch is
+implemented with integer scatter/gather (not one-hot matmuls) so the
+compiled FLOPs reflect *active* compute, which matters for the roofline
+(MODEL_FLOPS uses 6·N_active·D for MoE).
+
+Expert weights are stacked ``[L, E, d, f]`` → expert-parallel sharding
+puts E on the ``model`` mesh axis; with tokens sharded on ``data`` the
+dispatch/combine lower to all-to-all style collectives under GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MoEConfig
+
+
+def init_moe(key, cfg: ModelConfig, n_layers: int, dtype=jnp.bfloat16) -> Dict:
+    mc = cfg.moe
+    d, fe, E, L = cfg.d_model, mc.d_expert, mc.n_experts, n_layers
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (L, d, E), jnp.float32) * 0.02,
+        "w_gate": jax.random.normal(ks[1], (L, E, d, fe), dtype) / math.sqrt(d),
+        "w_up": jax.random.normal(ks[2], (L, E, d, fe), dtype) / math.sqrt(d),
+        "w_down": jax.random.normal(ks[3], (L, E, fe, d), dtype) / math.sqrt(fe),
+    }
+
+
+def expert_capacity(n_tokens: int, mc: MoEConfig) -> int:
+    cap = int(math.ceil(n_tokens * mc.top_k / mc.n_experts * mc.capacity_factor))
+    return max(8, ((cap + 7) // 8) * 8)   # pad to 8 for TPU-friendly tiling
+
+
+def route(x: jnp.ndarray, router_w: jnp.ndarray, mc: MoEConfig
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [T, d] → (gates [T,k], expert_idx [T,k], aux_loss)."""
+    logits = x.astype(jnp.float32) @ router_w            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, mc.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    me = probs.mean(0)                                   # mean prob per expert
+    ce = jnp.zeros((mc.n_experts,), jnp.float32).at[idx[:, 0]].add(1.0)
+    ce = ce / x.shape[0]
+    aux = mc.n_experts * jnp.sum(me * ce) * mc.aux_loss_coef
+    return gates, idx, aux
+
+
+def moe_ffn_dropless(x: jnp.ndarray, p: Dict, li, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless MoE (per-token gathered expert weights).
+
+    Serving path: token outputs are independent of batch composition —
+    required for prefill/decode vs full-forward consistency.  Memory
+    cost is O(T·k·d·f_e) gathered weights, fine for the CPU engine; the
+    distributed paths use the capacity dispatch below.
+    """
+    mc = cfg.moe
+    b, s, d = x.shape
+    T = b * s
+    xt = x.reshape(T, d)
+    gates, idx, aux = route(xt, p["router"][li], mc)      # [T,k]
+    wg = p["w_gate"][li][idx]                             # [T,k,d,fe]
+    wu = p["w_up"][li][idx]
+    wd = p["w_down"][li][idx]                             # [T,k,fe,d]
+    h = jnp.einsum("td,tkdf->tkf", xt, wg)
+    u = jnp.einsum("td,tkdf->tkf", xt, wu)
+    y = jnp.einsum("tkf,tkfd->tkd", jax.nn.silu(h) * u, wd)
+    out = (y * gates[..., None].astype(y.dtype)).sum(axis=1)
+    return out.reshape(b, s, d), aux
+
+
+def moe_ffn(x: jnp.ndarray, p: Dict, li, cfg: ModelConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] → (out [B, S, d], aux_loss scalar).
+
+    Sharding: token-major tensors ride the (pod, data) axes, the
+    expert-major dispatch buffer rides the model axis — the T-sharded →
+    E-sharded transition is the expert-parallel all-to-all under GSPMD.
+    Without the explicit constraints GSPMD replicates the [T·k, d]
+    combine intermediates (measured 128 GiB/device on qwen3-moe
+    train_4k — EXPERIMENTS.md §Perf).
+    """
+    from repro.models.layers import constrain
+    mc = cfg.moe
+    b, s, d = x.shape
+    T = b * s
+    xt = constrain(x.reshape(T, d), ("pod", "data"), None)
+    gates, idx, aux = route(xt, p["router"][li], mc)     # [T,k]
+
+    E, k = mc.n_experts, mc.top_k
+    cap = expert_capacity(T, mc)
+
+    # position of each (token, slot) within its expert, in flat order
+    flat_e = idx.reshape(-1)                              # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # [T*k, E]
+    pos_in_e = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                                   flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap                                 # capacity mask
+
+    # dispatch: [E, cap, d].  slot i belongs to token i//k, so the
+    # token→slot expansion is a local broadcast+reshape (keeps the
+    # (pod,data) sharding — a gather ``xt[tok_of_slot]`` would force an
+    # all-gather of the whole token tensor).  The scatter into the
+    # E-major buffer is the expert-parallel all-to-all.
+    e_safe = jnp.where(keep, flat_e, 0)
+    p_safe = jnp.where(keep, pos_in_e, cap - 1)
+    xt_rep = jnp.broadcast_to(xt[:, None], (T, k, d)).reshape(T * k, d)
+    upd = jnp.where(keep[:, None], xt_rep, 0).astype(xt.dtype)
+    upd = constrain(upd, ("pod", "data"), None)
+    disp = jnp.zeros((E, cap, d), xt.dtype)
+    disp = disp.at[e_safe, p_safe].add(upd)
+    disp = constrain(disp, "model", None, None)
+
+    # expert FFN: [E, cap, d] x [E, d, fe]  (E on the model axis)
+    h = jnp.einsum("ecd,edf->ecf", disp, p["w_gate"][li])
+    u = jnp.einsum("ecd,edf->ecf", disp, p["w_up"][li])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"][li])
+    y = constrain(y, "model", None, None)
+
+    # combine: slot outputs gathered back token-major, then a local
+    # [T, k] reduction (no scatter — slots of one token are adjacent)
+    slot_out = y[e_safe, p_safe]                          # [T*k, d]
+    slot_out = constrain(slot_out, ("pod", "data"), None)
+    slot_out = jnp.where(keep[:, None], slot_out, 0)
+    w = (gates.reshape(-1) * keep).astype(slot_out.dtype) # [T*k]
+    out = (slot_out * w[:, None]).reshape(T, k, d).sum(axis=1)
+    out = constrain(out, ("pod", "data"), None)
+    return out.reshape(b, s, d), aux

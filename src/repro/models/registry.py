@@ -1,0 +1,30 @@
+"""Architecture registry: arch-id → (config, init, forward)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import ModelConfig
+from repro.models import transformer
+
+
+def get_config(arch: str) -> ModelConfig:
+    return configs.get(arch)
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    return configs.get_reduced(arch)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    return transformer.init_params(key, cfg, dtype)
+
+
+def forward(params, cfg: ModelConfig, tokens, **kw):
+    return transformer.forward(params, cfg, tokens, **kw)
+
+
+def list_archs():
+    return list(configs.ARCH_IDS)

@@ -1,0 +1,149 @@
+"""Device-side ops on the unified head-wise KV pool (pure jnp).
+
+These are the XLA reference semantics for ``kernels/paged_attention``
+and are used directly by the CPU engine and the dry-run lowering.
+
+Physical head-block id for (token-block base b, layer l, kv head h) of a
+model with KV kv-heads: ``b + l*KV + h`` (groups are contiguous —
+see serving/kvcache.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import BLOCK_TOKENS
+
+
+def write_tokens(pool_k, pool_v, k_new, v_new, table, start_pos, layer, n_kv):
+    """Scatter new KV into the pool.
+
+    pool_k/v: [N, BT, hd]
+    k_new/v_new: [B, S, KV, hd] — S new tokens starting at start_pos[b]
+    table: [B, max_blocks] int32 group bases (−1 padded)
+    start_pos: [B] int32 — position of the first new token
+    Returns updated (pool_k, pool_v).
+    """
+    B, S, KV, hd = k_new.shape
+    BT = pool_k.shape[1]
+    pos = start_pos[:, None] + jnp.arange(S)[None, :]          # [B,S]
+    blk = pos // BT                                            # [B,S]
+    off = pos % BT
+    base = jnp.take_along_axis(table, blk, axis=1)             # [B,S]
+    valid = base >= 0
+    phys = (jnp.maximum(base, 0)[:, :, None]
+            + layer * n_kv + jnp.arange(KV)[None, None, :])    # [B,S,KV]
+    off_b = jnp.broadcast_to(off[:, :, None], phys.shape)
+    # invalid slots → OOB index, dropped by scatter mode="drop"
+    phys = jnp.where(valid[:, :, None], phys, pool_k.shape[0])
+    pool_k = pool_k.at[phys.reshape(-1), off_b.reshape(-1)].set(
+        k_new.reshape(-1, hd), mode="drop")
+    pool_v = pool_v.at[phys.reshape(-1), off_b.reshape(-1)].set(
+        v_new.reshape(-1, hd), mode="drop")
+    return pool_k, pool_v
+
+
+def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
+    """Single-token decode attention against the paged pool (oracle).
+
+    q: [B, H, hd] — one query token per sequence (post-RoPE)
+    pool_k/v: [N, BT, hd]
+    table: [B, max_blocks]; seq_lens: [B] (length INCLUDING current token,
+    whose KV must already be written).
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    BT = pool_k.shape[1]
+    max_blocks = table.shape[1]
+    group = H // n_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    base = jnp.maximum(table, 0)                               # [B,nb]
+    phys = (base[:, :, None] + layer * n_kv
+            + jnp.arange(n_kv)[None, None, :])                 # [B,nb,KV]
+    k = pool_k[phys]                                           # [B,nb,KV,BT,hd]
+    v = pool_v[phys]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(B, n_kv, max_blocks * BT, hd)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(B, n_kv, max_blocks * BT, hd)
+
+    qh = q.reshape(B, n_kv, group, hd)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qh, k).astype(jnp.float32) * scale
+    t_pos = jnp.arange(max_blocks * BT)[None, None, None, :]
+    mask = t_pos < seq_lens[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v)
+    return out.reshape(B, H, hd)
+
+
+def paged_chunk_attention(q, pool_k, pool_v, table, q_offset, layer, n_kv):
+    """Chunked-prefill attention: a chunk of C query tokens per sequence
+    attends causally against the pool (earlier chunks + this chunk's
+    already-written KV).
+
+    q: [B, C, H, hd] (post-RoPE, absolute positions q_offset+i)
+    pool_k/v: [N, BT, hd]; table: [B, max_blocks]; q_offset: [B]
+    Returns [B, C, H, hd].
+    """
+    B, C, H, hd = q.shape
+    BT = pool_k.shape[1]
+    max_blocks = table.shape[1]
+    group = H // n_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    base = jnp.maximum(table, 0)
+    phys = (base[:, :, None] + layer * n_kv
+            + jnp.arange(n_kv)[None, None, :])               # [B,nb,KV]
+    k = pool_k[phys].transpose(0, 2, 1, 3, 4).reshape(
+        B, n_kv, max_blocks * BT, hd)
+    v = pool_v[phys].transpose(0, 2, 1, 3, 4).reshape(
+        B, n_kv, max_blocks * BT, hd)
+
+    qh = q.reshape(B, C, n_kv, group, hd)
+    scores = jnp.einsum("bckgd,bktd->bkgct", qh, k).astype(jnp.float32) \
+        * scale
+    t_pos = jnp.arange(max_blocks * BT)[None, None, None, None, :]
+    q_pos = (q_offset[:, None] + jnp.arange(C))[:, None, None, :, None]
+    mask = t_pos <= q_pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgct,bktd->bckgd", probs, v)
+    return out.reshape(B, C, H, hd)
+
+
+def windowed_decode_attention(q, win_k, win_v, seq_lens, window):
+    """Decode attention over a ring-buffer sliding-window cache.
+
+    q: [B,H,hd]; win_k/v: [B, KV, W, hd] ring buffers; seq_lens: [B]
+    (length including current token).  Slot for position p is p % W.
+    """
+    B, H, hd = q.shape
+    KV, W = win_k.shape[1], win_k.shape[2]
+    group = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, KV, group, hd)
+    scores = jnp.einsum("bkgd,bkwd->bkgw", qh, win_k).astype(jnp.float32) * scale
+    # valid slots: positions in [seq_len - min(seq_len, W), seq_len)
+    slot = jnp.arange(W)[None, :]
+    cur = seq_lens[:, None]                                    # [B,1]
+    # position stored in slot s: the largest p < cur with p % W == s
+    p_in_slot = cur - 1 - ((cur - 1 - slot) % W)
+    valid = (p_in_slot >= 0) & (p_in_slot >= cur - W)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgw,bkwd->bkgd", probs, win_v).reshape(B, H, hd)
+
+
+def write_window(win_k, win_v, k_new, v_new, pos):
+    """Write one token's KV into the ring buffer at slot pos % W.
+
+    win_k/v: [B,KV,W,hd]; k_new/v_new: [B,KV,hd]; pos: [B]."""
+    W = win_k.shape[2]
+    slot = pos % W
+    b_idx = jnp.arange(win_k.shape[0])
+    win_k = win_k.at[b_idx, :, slot].set(k_new)
+    win_v = win_v.at[b_idx, :, slot].set(v_new)
+    return win_k, win_v

@@ -1,0 +1,484 @@
+"""Per-LLM runtime engine: disaggregated prefill / decode jobs.
+
+Mirrors MuxServe's runtime-engine design (§3.4): prefill and decode are
+*separate jobs* operating on shared weights and the unified KV pool.
+The global ADBS scheduler (serving/mux.py) decides which job runs each
+tick; on TPU the analogue of MPS SM-assignment is the fused multi-LLM
+step (DESIGN.md §2).
+
+The engine manages a fixed number of decode *slots* (continuous
+batching): a sequence occupies a slot from prefill completion until
+finish, and its attention KV lives in the unified pool while SSM state
+(constant-size) lives in per-slot dense arrays.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import BLOCK_TOKENS, ModelConfig
+from repro.models import mamba2 as M2
+from repro.models import moe as MoE
+from repro.models.layers import (attn_qkv, causal_attention, lm_logits, mlp,
+                                 rms_norm)
+from repro.serving import cache_ops
+from repro.serving.kvcache import ModelCacheView, UnifiedKVPool
+
+
+@dataclass
+class Request:
+    req_id: int
+    model: str
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    # runtime state
+    output: List[int] = field(default_factory=list)
+    prefill_done: float = -1.0
+    finish: float = -1.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class Engine:
+    """Inference engine for one LLM over the shared pool (CPU/XLA path)."""
+
+    def __init__(self, cfg: ModelConfig, params, view: ModelCacheView,
+                 max_slots: int = 8, max_blocks_per_seq: int = 64,
+                 rng_seed: int = 0, chunk_tokens: Optional[int] = None):
+        """``chunk_tokens``: enable CHUNKED PREFILL (beyond-paper —
+        Sarathi-style): prompts are processed ``chunk_tokens`` at a
+        time, one chunk per scheduler tick, so colocated LLMs' decode
+        jobs interleave between chunks and a long prompt cannot
+        monopolize the unit (bounds TTFT interference under ADBS).
+        Attention families only (SSM state chunking is a natural
+        extension — the mixer already carries state)."""
+        self.cfg = cfg
+        self.params = params
+        self.view = view
+        self.pool = view.pool
+        self.max_slots = max_slots
+        self.max_blocks = max_blocks_per_seq
+        # chunked prefill: attention families chunk against the pool;
+        # pure-SSM models chunk via the mixer's state carry.  Hybrid
+        # (zamba2) keeps whole-prompt prefill (mixed cache chunking is
+        # a straightforward extension, not done here).
+        self.chunk_tokens = None if cfg.family == "hybrid" else chunk_tokens
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.slot_seq: np.ndarray = np.full(max_slots, -1, np.int64)
+        self.finished: List[Request] = []
+        self._prefilling: Dict[int, int] = {}   # slot → next prompt pos
+        self._next_seq = 0
+        self._rng = np.random.default_rng(rng_seed)
+
+        # SSM per-slot state
+        if cfg.ssm:
+            sc = cfg.ssm
+            conv_dim = cfg.d_inner + 2 * sc.n_groups * sc.d_state
+            self.ssm_state = jnp.zeros(
+                (cfg.n_layers, max_slots, cfg.n_ssm_heads, sc.head_dim,
+                 sc.d_state), jnp.float32)
+            self.conv_tail = jnp.zeros(
+                (cfg.n_layers, max_slots, sc.conv_kernel - 1, conv_dim),
+                jnp.bfloat16 if params["tok"]["embed"].dtype == jnp.bfloat16
+                else params["tok"]["embed"].dtype)
+        else:
+            self.ssm_state = None
+            self.conv_tail = None
+
+        self._prefill_fn = jax.jit(partial(_prefill_impl, cfg=cfg),
+                                   donate_argnums=(3, 4))
+        self._decode_fn = jax.jit(partial(_decode_impl, cfg=cfg),
+                                  donate_argnums=(3, 4))
+        if cfg.family == "ssm":
+            self._chunk_fn = jax.jit(partial(_prefill_chunk_ssm_impl,
+                                             cfg=cfg),
+                                     donate_argnums=(3, 4))
+        else:
+            self._chunk_fn = jax.jit(partial(_prefill_chunk_impl, cfg=cfg),
+                                     donate_argnums=(4, 5))
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def can_admit(self, req: Request) -> bool:
+        if not self.free_slots():
+            return False
+        total = len(req.prompt) + req.max_new_tokens
+        # admission: quota for the whole request lifetime
+        fake_seq = -1
+        blocks = -(-total // BLOCK_TOKENS) * self.view.group_size
+        if self.cfg.ssm:
+            blocks += self.view._ssm_blocks_per_seq
+        return blocks <= min(self.view.quota_headroom(),
+                             self.pool.allocator.free_blocks)
+
+    # ------------------------------------------------------------------
+    def prefill(self, reqs: List[Request]) -> int:
+        """Run one prefill job for up to len(free_slots) requests.
+
+        Returns number of prompt tokens processed (0 if nothing ran).
+        With ``chunk_tokens`` set, admits the requests and advances all
+        in-flight prefills by one chunk instead (call again next tick).
+        """
+        if self.chunk_tokens:
+            return self._prefill_chunked(reqs)
+        reqs = reqs[:len(self.free_slots())]
+        admitted = []
+        for r in reqs:
+            if self.can_admit(r):
+                admitted.append(r)
+        if not admitted:
+            return 0
+        B = len(admitted)
+        S = _round_up(max(len(r.prompt) for r in admitted), BLOCK_TOKENS)
+        toks = np.zeros((B, S), np.int32)
+        lens = np.array([len(r.prompt) for r in admitted], np.int32)
+        slot_ids = self.free_slots()[:B]
+        seq_ids = []
+        for i, r in enumerate(admitted):
+            toks[i, :lens[i]] = r.prompt
+            sid = self._next_seq
+            self._next_seq += 1
+            seq_ids.append(sid)
+            ok = self.view.append_tokens(sid, int(lens[i]))
+            assert ok, "admission check guaranteed quota"
+            self.slots[slot_ids[i]] = r
+            self.slot_seq[slot_ids[i]] = sid
+            r._seq_id = sid
+
+        table = self.view.block_table(seq_ids, self.max_blocks)
+        pool_k, pool_v, logits, new_ssm, new_tail = self._prefill_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            self.pool.k, self.pool.v, jnp.asarray(table))
+        self.pool.k, self.pool.v = pool_k, pool_v
+        if self.cfg.ssm:
+            sl = jnp.asarray(slot_ids)
+            self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm)
+            self.conv_tail = self.conv_tail.at[:, sl].set(
+                new_tail.astype(self.conv_tail.dtype))
+        # sample first token
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, r in enumerate(admitted):
+            r.output.append(int(nxt[i]))
+            self.view.append_tokens(seq_ids[i], 1)  # reserve for new token
+        return int(lens.sum())
+
+    # ------------------------------------------------------------------
+    def _prefill_chunked(self, reqs: List[Request]) -> int:
+        """Admit new requests, then advance every in-flight prefill by
+        one ``chunk_tokens`` window (one jitted step for the batch)."""
+        # admission: same lifetime reservation as the unchunked path
+        for r in reqs[:len(self.free_slots())]:
+            if not self.free_slots():
+                break
+            if not self.can_admit(r):
+                continue
+            slot = self.free_slots()[0]
+            sid = self._next_seq
+            self._next_seq += 1
+            ok = self.view.append_tokens(sid, len(r.prompt))
+            assert ok
+            self.slots[slot] = r
+            self.slot_seq[slot] = sid
+            r._seq_id = sid
+            self._prefilling[slot] = 0
+
+        if not self._prefilling:
+            return 0
+        C = self.chunk_tokens
+        slots = sorted(self._prefilling)
+        B = len(slots)
+        toks = np.zeros((B, C), np.int32)
+        offs = np.zeros((B,), np.int32)
+        clens = np.zeros((B,), np.int32)
+        for i, sl in enumerate(slots):
+            r = self.slots[sl]
+            pos = self._prefilling[sl]
+            n = min(C, len(r.prompt) - pos)
+            toks[i, :n] = r.prompt[pos:pos + n]
+            offs[i] = pos
+            clens[i] = n
+        seq_ids = [int(self.slot_seq[sl]) for sl in slots]
+        if self.cfg.ssm:
+            sl_idx = jnp.asarray(np.array(slots))
+            st = self.ssm_state[:, sl_idx]
+            tail = self.conv_tail[:, sl_idx]
+            # fresh sequences start from zero state
+            fresh = jnp.asarray((offs == 0).astype(np.float32))
+            st = st * (1.0 - fresh)[None, :, None, None, None]
+            tail = tail * (1.0 - fresh[None, :, None, None]).astype(
+                tail.dtype)
+            logits, new_st, new_tail = self._chunk_fn(
+                self.params, jnp.asarray(toks), jnp.asarray(clens),
+                st, tail)
+            self.ssm_state = self.ssm_state.at[:, sl_idx].set(new_st)
+            self.conv_tail = self.conv_tail.at[:, sl_idx].set(
+                new_tail.astype(self.conv_tail.dtype))
+        else:
+            table = self.view.block_table(seq_ids, self.max_blocks)
+            pool_k, pool_v, logits = self._chunk_fn(
+                self.params, jnp.asarray(toks), jnp.asarray(offs),
+                jnp.asarray(clens), self.pool.k, self.pool.v,
+                jnp.asarray(table))
+            self.pool.k, self.pool.v = pool_k, pool_v
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done_tokens = 0
+        for i, sl in enumerate(slots):
+            r = self.slots[sl]
+            self._prefilling[sl] += int(clens[i])
+            done_tokens += int(clens[i])
+            if self._prefilling[sl] >= len(r.prompt):
+                del self._prefilling[sl]
+                r.output.append(int(nxt[i]))       # first generated token
+                self.view.append_tokens(r._seq_id, 1)
+        return done_tokens
+
+    # ------------------------------------------------------------------
+    def decode(self) -> int:
+        """One decode step over all active slots (prefilling slots are
+        excluded until their prompt completes).  Returns #tokens."""
+        act = [s for s in self.active_slots() if s not in self._prefilling]
+        if not act:
+            return 0
+        B = len(act)
+        reqs = [self.slots[i] for i in act]
+        seq_ids = [r._seq_id for r in reqs]
+        last = np.array([r.output[-1] if r.output else r.prompt[-1]
+                         for r in reqs], np.int32)
+        lens = self.view.seq_lens(seq_ids)  # includes reserved current token
+        table = self.view.block_table(seq_ids, self.max_blocks)
+        sl = jnp.asarray(np.array(act))
+
+        ssm_state = self.ssm_state[:, sl] if self.cfg.ssm else None
+        conv_tail = self.conv_tail[:, sl] if self.cfg.ssm else None
+        pool_k, pool_v, logits, new_ssm, new_tail = self._decode_fn(
+            self.params, jnp.asarray(last), jnp.asarray(lens),
+            self.pool.k, self.pool.v, jnp.asarray(table),
+            ssm_state, conv_tail)
+        self.pool.k, self.pool.v = pool_k, pool_v
+        if self.cfg.ssm:
+            self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm)
+            self.conv_tail = self.conv_tail.at[:, sl].set(new_tail)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done_tokens = 0
+        for i, r in enumerate(reqs):
+            r.output.append(int(nxt[i]))
+            done_tokens += 1
+            if r.done:
+                import time as _time
+                r.finish = _time.perf_counter()
+                self.view.free_seq(seq_ids[i])
+                slot = act[i]
+                self.slots[slot] = None
+                self.slot_seq[slot] = -1
+                self.finished.append(r)
+            else:
+                self.view.append_tokens(seq_ids[i], 1)
+        return done_tokens
+
+    def has_decode_work(self) -> bool:
+        return any(s not in self._prefilling for s in self.active_slots())
+
+    def has_prefill_work(self) -> bool:
+        return bool(self._prefilling)
+
+
+# ---------------------------------------------------------------------------
+# jitted step implementations (XLA reference path)
+# ---------------------------------------------------------------------------
+def _prefill_chunk_impl(params, toks, offs, clens, pool_k, pool_v, table,
+                        *, cfg: ModelConfig):
+    """One chunked-prefill step: process C prompt tokens per sequence at
+    absolute positions offs+i, writing KV into the pool and attending
+    against everything written so far.  Garbage KV at padded positions
+    (i ≥ clens) lands on future decode slots, which decode overwrites
+    before attending — harmless by construction."""
+    B, C = toks.shape
+    x = params["tok"]["embed"][toks]
+    positions = offs[:, None] + jnp.arange(C)[None, :]
+    lp = params["layers"]
+
+    attn_li = 0
+    for li in range(cfg.n_layers):
+        h = rms_norm(x, lp["ln1"][li], cfg.rms_eps)
+        q, k, v = attn_qkv(h, lp, li, cfg, positions)
+        pool_k, pool_v = cache_ops.write_tokens(
+            pool_k, pool_v, k, v, table, offs, attn_li, cfg.n_kv_heads)
+        o = cache_ops.paged_chunk_attention(
+            q, pool_k, pool_v, table, offs, attn_li, cfg.n_kv_heads)
+        x = x + o.reshape(B, C, -1) @ lp["wo"][li]
+        attn_li += 1
+        h = rms_norm(x, lp["ln2"][li], cfg.rms_eps)
+        if cfg.family == "moe":
+            out, _ = MoE.moe_ffn_dropless(h, lp, li, cfg)
+            x = x + out
+        else:
+            x = x + mlp(h, lp, li)
+
+    idx = jnp.maximum(clens - 1, 0)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(x_last, params["tok"], cfg)[..., :cfg.vocab_size]
+    return pool_k, pool_v, logits
+
+
+def _prefill_chunk_ssm_impl(params, toks, clens, ssm_state, conv_tail, *,
+                            cfg: ModelConfig):
+    """Chunked prefill for pure-SSM models: the mixer's conv-tail +
+    state carry IS the chunk boundary.  ``clens`` masks padded chunk
+    positions (dt=0 ⇒ state frozen past the true chunk length)."""
+    B, C = toks.shape
+    x = params["tok"]["embed"][toks]
+    mask = jnp.arange(C)[None, :] < clens[:, None]
+    lp = params["layers"]
+    new_ssm = ssm_state
+    new_tail = conv_tail
+    for li in range(cfg.n_layers):
+        h = rms_norm(x, lp["ln1"][li], cfg.rms_eps)
+        out, st, tail = M2.mamba2_mixer(
+            h, lp, li, cfg, conv_tail=conv_tail[li],
+            ssm_state=ssm_state[li], return_cache=True, length_mask=mask)
+        x = x + out
+        new_ssm = new_ssm.at[li].set(st)
+        new_tail = new_tail.at[li].set(tail.astype(new_tail.dtype))
+    idx = jnp.maximum(clens - 1, 0)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(x_last, params["tok"], cfg)[..., :cfg.vocab_size]
+    return logits, new_ssm, new_tail
+def _prefill_impl(params, toks, lens, pool_k, pool_v, table, *,
+                  cfg: ModelConfig):
+    """Prefill: full causal forward, write KV/state caches, last logits."""
+    B, S = toks.shape
+    x = params["tok"]["embed"][toks]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    lp = params["layers"]
+    n_attn_seen = 0  # static counter for attn layer index within cache
+
+    new_ssm = None
+    new_tail = None
+    if cfg.ssm:
+        sc = cfg.ssm
+        conv_dim = cfg.d_inner + 2 * sc.n_groups * sc.d_state
+        new_ssm = jnp.zeros((cfg.n_layers, B, cfg.n_ssm_heads, sc.head_dim,
+                             sc.d_state), jnp.float32)
+        new_tail = jnp.zeros((cfg.n_layers, B, sc.conv_kernel - 1, conv_dim),
+                             x.dtype)
+
+    def attn_layer(x, li, attn_li, lp_attn, pool_k, pool_v):
+        h = rms_norm(x, lp_attn["ln1"][li], cfg.rms_eps)
+        q, k, v = attn_qkv(h, lp_attn, li, cfg, positions)
+        o = causal_attention(q, k, v)
+        pool_k, pool_v = cache_ops.write_tokens(
+            pool_k, pool_v, k, v, table, jnp.zeros((B,), jnp.int32),
+            attn_li, cfg.n_kv_heads)
+        x = x + o.reshape(B, S, -1) @ lp_attn["wo"][li]
+        return x, pool_k, pool_v
+
+    # NOTE: python loop over layers (engine path is CPU small-model;
+    # lowering cost is acceptable and lets attn-layer cache indices be
+    # static).
+    attn_li = 0
+    for li in range(cfg.n_layers):
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            x, pool_k, pool_v = attn_layer(x, li, attn_li, lp, pool_k, pool_v)
+            attn_li += 1
+            h = rms_norm(x, lp["ln2"][li], cfg.rms_eps)
+            if cfg.family == "moe":
+                out, _ = MoE.moe_ffn_dropless(h, lp, li, cfg)
+                x = x + out
+            else:
+                x = x + mlp(h, lp, li)
+        else:  # ssm / hybrid
+            h = rms_norm(x, lp["ln1"][li], cfg.rms_eps)
+            out, fstate, tail = M2.mamba2_mixer(
+                h, lp, li, cfg, return_cache=True,
+                length_mask=positions < lens[:, None])
+            x = x + out
+            new_ssm = new_ssm.at[li].set(fstate)
+            new_tail = new_tail.at[li].set(tail.astype(x.dtype))
+            if cfg.family == "hybrid" and (li + 1) % cfg.attn_every == 0:
+                sa = params["shared_attn"]
+                x, pool_k, pool_v = attn_layer(x, 0, attn_li, sa,
+                                               pool_k, pool_v)
+                attn_li += 1
+                h2 = rms_norm(x, sa["ln2"][0], cfg.rms_eps)
+                x = x + mlp(h2, sa, 0)
+
+    # logits at the true last prompt token
+    idx = jnp.maximum(lens - 1, 0)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(x_last, params["tok"], cfg)[..., :cfg.vocab_size]
+    return pool_k, pool_v, logits, new_ssm, new_tail
+
+
+def _decode_impl(params, last_tok, lens, pool_k, pool_v, table,
+                 ssm_state, conv_tail, *, cfg: ModelConfig):
+    """One decode step: write KV of current token, attend, next logits.
+
+    ``lens`` includes the current token (its slot is already reserved);
+    its position is lens-1.
+    """
+    B = last_tok.shape[0]
+    x = params["tok"]["embed"][last_tok]                    # [B,d]
+    pos = (lens - 1).astype(jnp.int32)
+    lp = params["layers"]
+
+    new_ssm = ssm_state
+    new_tail = conv_tail
+
+    def attn_layer(x, li, attn_li, lp_attn, pool_k, pool_v):
+        h = rms_norm(x, lp_attn["ln1"][li], cfg.rms_eps)
+        q, k, v = attn_qkv(h[:, None, :], lp_attn, li, cfg, pos[:, None])
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]                 # [B,H,hd]
+        pool_k, pool_v = cache_ops.write_tokens(
+            pool_k, pool_v, k[:, None], v[:, None], table, pos,
+            attn_li, cfg.n_kv_heads)
+        o = cache_ops.paged_decode_attention(
+            q, pool_k, pool_v, table, lens, attn_li, cfg.n_kv_heads)
+        x = x + o.reshape(B, -1) @ lp_attn["wo"][li]
+        return x, pool_k, pool_v
+
+    attn_li = 0
+    for li in range(cfg.n_layers):
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            x, pool_k, pool_v = attn_layer(x, li, attn_li, lp, pool_k, pool_v)
+            attn_li += 1
+            h = rms_norm(x, lp["ln2"][li], cfg.rms_eps)
+            if cfg.family == "moe":
+                out, _ = MoE.moe_ffn_dropless(h[:, None, :], lp, li, cfg)
+                x = x + out[:, 0]
+            else:
+                x = x + mlp(h, lp, li)
+        else:
+            h = rms_norm(x, lp["ln1"][li], cfg.rms_eps)
+            out, tail_i, st_i = M2.mamba2_decode_step(
+                h, lp, li, cfg, conv_tail[li], ssm_state[li])
+            x = x + out
+            new_ssm = new_ssm.at[li].set(st_i)
+            new_tail = new_tail.at[li].set(tail_i)
+            if cfg.family == "hybrid" and (li + 1) % cfg.attn_every == 0:
+                sa = params["shared_attn"]
+                x, pool_k, pool_v = attn_layer(x, 0, attn_li, sa,
+                                               pool_k, pool_v)
+                attn_li += 1
+                h2 = rms_norm(x, sa["ln2"][0], cfg.rms_eps)
+                x = x + mlp(h2, sa, 0)
+
+    logits = lm_logits(x, params["tok"], cfg)[..., :cfg.vocab_size]
+    return pool_k, pool_v, logits, new_ssm, new_tail

@@ -1,0 +1,246 @@
+"""Unified head-wise KV cache pool (paper §3.4).
+
+The pool is a single arena of *head-blocks*: each block holds
+``BLOCK_TOKENS`` tokens of one KV head (``[BLOCK_TOKENS, head_dim]``).
+Because the block shape is model-independent (head_dim is uniform across
+the colocated LLMs — 128 for LLaMA/GPT-3 per the paper; we check and
+group pools by head_dim), LLMs of different depths/head-counts share one
+memory space.  ADBS enforces per-LLM head-block quotas and re-allocates
+them at runtime (paper Alg. 3).
+
+Allocation granularity: within one LLM, a logical *token block* (16
+tokens of one sequence) needs ``n_layers × n_kv_heads`` head-blocks; we
+allocate them as one contiguous range ("group") so the device-side
+block table is a single base id per token block and the physical index
+is ``base + layer*KV + head``.  Sharing between models remains at
+head-block granularity (groups of different sizes draw from the same
+free space); freeing coalesces ranges, so external fragmentation is
+bounded by group size at range boundaries (measured in tests).
+
+SSM models store their constant-size state separately (state is O(1)
+per sequence — paging adds nothing); their token-block usage for ADBS
+quota accounting is computed from the state footprint.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import BLOCK_TOKENS, ModelConfig
+
+
+class BlockAllocator:
+    """First-fit contiguous range allocator over head-blocks (host side).
+
+    Free space kept as a sorted list of ``[start, end)`` ranges.
+    """
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free: List[Tuple[int, int]] = [(0, n_blocks)]
+        self.used = 0
+
+    def alloc(self, n: int) -> Optional[int]:
+        for i, (s, e) in enumerate(self._free):
+            if e - s >= n:
+                if e - s == n:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (s + n, e)
+                self.used += n
+                return s
+        return None
+
+    def free(self, start: int, n: int) -> None:
+        if n <= 0:
+            return
+        self.used -= n
+        new = (start, start + n)
+        i = bisect.bisect_left(self._free, new)
+        self._free.insert(i, new)
+        # coalesce neighbours
+        merged: List[Tuple[int, int]] = []
+        for s, e in self._free:
+            if merged and s <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+            else:
+                merged.append((s, e))
+        self._free = merged
+
+    @property
+    def free_blocks(self) -> int:
+        return self.n_blocks - self.used
+
+    def largest_free_range(self) -> int:
+        return max((e - s for s, e in self._free), default=0)
+
+    def fragmentation(self) -> float:
+        """1 − largest_free/total_free (0 = one contiguous free range)."""
+        if self.free_blocks == 0:
+            return 0.0
+        return 1.0 - self.largest_free_range() / self.free_blocks
+
+
+@dataclass
+class SeqCache:
+    """Host-side bookkeeping for one sequence's cache."""
+    seq_id: int
+    bases: List[int] = field(default_factory=list)   # group base per token-block
+    n_tokens: int = 0
+
+
+class ModelCacheView:
+    """Per-LLM adapter onto the shared pool.
+
+    Tracks quota (head-blocks) granted by ADBS and per-sequence block
+    tables.  ``group_size = n_layers × n_kv_heads`` head-blocks per
+    token block (attention models); SSM models have group_size 0 and a
+    fixed per-seq state cost (accounted against quota, not the arena).
+    """
+
+    def __init__(self, cfg: ModelConfig, pool: "UnifiedKVPool", quota: int):
+        self.cfg = cfg
+        self.pool = pool
+        self.quota = quota
+        self.used = 0
+        self.group_size = cfg.n_attn_layers * cfg.n_kv_heads
+        self.seqs: Dict[int, SeqCache] = {}
+        self._started: set = set()
+        # SSM quota accounting: state bytes expressed in head-block units
+        self._ssm_blocks_per_seq = 0
+        if cfg.ssm:
+            state_bytes = (cfg.n_ssm_layers * cfg.n_ssm_heads
+                           * cfg.ssm.head_dim * cfg.ssm.d_state * 4)
+            self._ssm_blocks_per_seq = max(
+                1, state_bytes // pool.head_block_bytes)
+
+    # ---- quota ------------------------------------------------------
+    def quota_headroom(self) -> int:
+        return self.quota - self.used
+
+    def can_append(self, seq_id: int, n_tokens: int) -> bool:
+        return self._blocks_needed(seq_id, n_tokens) <= min(
+            self.quota_headroom(), self.pool.allocator.free_blocks)
+
+    def _blocks_needed(self, seq_id: int, n_tokens: int) -> int:
+        sc = self.seqs.get(seq_id)
+        have = len(sc.bases) * BLOCK_TOKENS if sc else 0
+        cur = sc.n_tokens if sc else 0
+        need_tokens = max(0, cur + n_tokens - have)
+        n_groups = -(-need_tokens // BLOCK_TOKENS)
+        cost = n_groups * self.group_size
+        if sc is None and self.cfg.ssm:
+            cost += self._ssm_blocks_per_seq
+        return cost
+
+    # ---- allocation ---------------------------------------------------
+    def append_tokens(self, seq_id: int, n_tokens: int) -> bool:
+        """Reserve cache space for n_tokens more tokens of seq_id."""
+        cost = self._blocks_needed(seq_id, n_tokens)
+        if cost > self.quota_headroom():
+            return False
+        sc = self.seqs.setdefault(seq_id, SeqCache(seq_id))
+        have = len(sc.bases) * BLOCK_TOKENS
+        need_tokens = max(0, sc.n_tokens + n_tokens - have)
+        n_groups = -(-need_tokens // BLOCK_TOKENS)
+        newly = []
+        for _ in range(n_groups):
+            if self.group_size > 0:
+                base = self.pool.allocator.alloc(self.group_size)
+                if base is None:
+                    for b in newly:   # roll back
+                        self.pool.allocator.free(b, self.group_size)
+                    return False
+                newly.append(base)
+        sc.bases.extend(newly)
+        sc.n_tokens += n_tokens
+        extra = n_groups * self.group_size
+        if seq_id not in self._started and self.cfg.ssm:
+            extra += self._ssm_blocks_per_seq
+        self._started.add(seq_id)
+        self.used += extra
+        self.pool.used_by[self.cfg.name] = self.used
+        return True
+
+    def free_seq(self, seq_id: int) -> None:
+        sc = self.seqs.pop(seq_id, None)
+        if sc is None:
+            return
+        for b in sc.bases:
+            self.pool.allocator.free(b, self.group_size)
+        freed = len(sc.bases) * self.group_size
+        if self.cfg.ssm and seq_id in self._started:
+            freed += self._ssm_blocks_per_seq
+        self._started.discard(seq_id)
+        self.used -= freed
+        self.pool.used_by[self.cfg.name] = self.used
+
+    # ---- device-side tables -------------------------------------------
+    def block_table(self, seq_ids: List[int], max_blocks: int) -> np.ndarray:
+        """[len(seq_ids), max_blocks] int32 group bases (−1 padded)."""
+        t = np.full((len(seq_ids), max_blocks), -1, np.int32)
+        for i, sid in enumerate(seq_ids):
+            bases = self.seqs[sid].bases[:max_blocks]
+            t[i, :len(bases)] = bases
+        return t
+
+    def seq_lens(self, seq_ids: List[int]) -> np.ndarray:
+        return np.array([self.seqs[s].n_tokens for s in seq_ids], np.int32)
+
+
+class UnifiedKVPool:
+    """The shared device arena + host allocator for one LLM unit."""
+
+    def __init__(self, n_head_blocks: int, head_dim: int,
+                 dtype=jnp.bfloat16, block_tokens: int = BLOCK_TOKENS):
+        self.n_head_blocks = n_head_blocks
+        self.head_dim = head_dim
+        self.block_tokens = block_tokens
+        self.dtype = dtype
+        self.k = jnp.zeros((n_head_blocks, block_tokens, head_dim), dtype)
+        self.v = jnp.zeros((n_head_blocks, block_tokens, head_dim), dtype)
+        self.allocator = BlockAllocator(n_head_blocks)
+        self.views: Dict[str, ModelCacheView] = {}
+        self.used_by: Dict[str, int] = {}
+
+    @property
+    def head_block_bytes(self) -> int:
+        return 2 * self.block_tokens * self.head_dim * self.dtype_bytes
+
+    @property
+    def dtype_bytes(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    def register_model(self, cfg: ModelConfig, quota: int) -> ModelCacheView:
+        assert cfg.attn_free or cfg.hd == self.head_dim or True, \
+            "pools are grouped by head_dim"
+        v = ModelCacheView(cfg, self, quota)
+        self.views[cfg.name] = v
+        self.used_by[cfg.name] = 0
+        return v
+
+    # ---- ADBS quota adaptation (paper Alg. 3, last line) ---------------
+    def adapt_quotas(self, min_quota: int = 64) -> None:
+        """Move head-block quota from low- to high-utilization LLMs."""
+        if len(self.views) < 2:
+            return
+        util = {n: (v.used / v.quota if v.quota else 1.0)
+                for n, v in self.views.items()}
+        lo = min(util, key=util.get)
+        hi = max(util, key=util.get)
+        if util[hi] - util[lo] < 0.2:
+            return
+        v_lo, v_hi = self.views[lo], self.views[hi]
+        spare = v_lo.quota - v_lo.used
+        move = min(spare // 2, self.n_head_blocks // 8)
+        if move > 0 and v_lo.quota - move >= min_quota:
+            v_lo.quota -= move
+            v_hi.quota += move
+
+    def utilization(self) -> float:
+        return self.allocator.used / self.n_head_blocks

@@ -1,0 +1,138 @@
+"""Weight-only + KV-cache int8 quantization for serving (§Perf).
+
+Beyond-paper optimization: the paper serves bf16 weights; on 16 GiB
+v5e chips a 104B model forces FSDP-style weight sharding whose per-step
+all-gathers dominate the decode roofline (command-r decode_32k:
+t_coll 0.33 s vs t_mem 11 ms).  Per-channel symmetric int8 weights
+halve the footprint so the model serves with 1-D (model-axis-only)
+sharding — no weight collectives at all — and int8 KV halves the
+decode's HBM traffic.
+
+Quantization is per OUTPUT channel (the last axis), so dequantization
+commutes with the matmul:  (x @ Wq)·s == x @ (Wq·s)  exactly — kernels
+dequantize after the GEMM, no big bf16 weight temporaries.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# stacked weight leaves that get int8 treatment (per family)
+_QUANT_LEAVES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                 "in_proj", "out_proj"}
+
+
+def quantize_tensor(w: jnp.ndarray, axis: int = -1
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-channel int8 over ``axis`` (the output channels).
+
+    Returns (q int8 same shape, scale f32 with ``axis`` kept)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)),
+                   axis=tuple(i for i in range(w.ndim)
+                              if i != (axis % w.ndim)),
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _stacked_scale_axes(name: str, ndim: int) -> Tuple[int, ...]:
+    """Reduction axes for a stacked [L, ..., d_out] weight: everything
+    except the layer dim (0) and the output dim (-1)."""
+    return tuple(range(1, ndim - 1))
+
+
+def quantize_leaf(name: str, w: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(layer, output-channel) int8 for a stacked weight."""
+    red = _stacked_scale_axes(name, w.ndim)
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=red,
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def quantize_params(params: Pytree) -> Pytree:
+    """Quantize a model param tree for serving.
+
+    Matmul weights → (name+"_q" int8, name+"_s" f32 broadcastable);
+    norms / biases / small leaves stay as-is.
+    """
+    def walk(d):
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k in _QUANT_LEAVES and v.ndim >= 3:
+                q, s = quantize_leaf(k, v)
+                out[k + "_q"] = q
+                out[k + "_s"] = s
+            elif k == "embed":
+                q, s = quantize_tensor(v, axis=-1)
+                out["embed_q"] = q
+                out["embed_s"] = s
+            elif k == "lm_head":
+                q, s = quantize_tensor(v, axis=-1)
+                out["lm_head_q"] = q
+                out["lm_head_s"] = s
+            else:
+                out[k] = v
+        return out
+
+    return walk(params)
+
+
+def qmatmul(x: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray
+            ) -> jnp.ndarray:
+    """x @ dequant(q, s) computed as (x @ q)·s (exact for per-output-
+    channel scales; no bf16 weight temporary)."""
+    y = x.astype(jnp.bfloat16) @ q.astype(jnp.bfloat16)
+    return (y.astype(jnp.float32) * jnp.squeeze(s)).astype(x.dtype)
+
+
+class QLayerView:
+    """Per-layer dict view over a quantized stacked-param tree that the
+    existing layer functions can index with ``li = 0``: weights are
+    dequantized lazily as [1, ...] bf16 slices (per-device slice only —
+    the full stack stays int8 in HBM)."""
+
+    def __init__(self, qtree: Dict, li):
+        self.qtree = qtree
+        self.li = li
+
+    def __contains__(self, k):
+        return k in self.qtree or (k + "_q") in self.qtree
+
+    def __getitem__(self, k):
+        t = self.qtree
+        if k + "_q" in t:
+            q = jax.lax.dynamic_index_in_dim(t[k + "_q"], self.li,
+                                             keepdims=False)
+            s = jax.lax.dynamic_index_in_dim(t[k + "_s"], self.li,
+                                             keepdims=False)
+            return (q.astype(jnp.bfloat16)
+                    * s.astype(jnp.bfloat16))[None]
+        return jax.lax.dynamic_index_in_dim(t[k], self.li,
+                                            keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+def quantize_kv(k: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One token's KV [B, KV, hd] → (int8, scale [B, KV])."""
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """[..., hd] int8 + [...] scale → f32."""
+    return q.astype(jnp.float32) * scale[..., None]

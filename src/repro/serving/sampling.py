@@ -1,0 +1,34 @@
+"""Token sampling: greedy / temperature / top-k / top-p, pure JAX."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0       # 0 → greedy
+    top_k: int = 0                 # 0 → off
+    top_p: float = 1.0             # 1 → off
+
+
+def sample(logits: jnp.ndarray, key, cfg: SamplingConfig) -> jnp.ndarray:
+    """logits: [B, V] → tokens [B] int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set whose mass ≥ top_p: keep entries with cum−p < top_p
+        keep_mask = cum - probs < cfg.top_p
+        thresh = jnp.min(jnp.where(keep_mask, sorted_l, jnp.inf), axis=-1)
+        logits = jnp.where(logits < thresh[:, None], -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,87 @@
+"""Checkpointing: pytree ⇄ directory of .npy files + a JSON manifest.
+
+No external deps (orbax not installed): leaves are saved individually
+with flattened key-paths so checkpoints are inspectable, partial-
+loadable, and robust to pytree-library version drift.  Atomic via
+write-to-tmp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return _SEP.join(parts)
+
+
+def save(ckpt_dir: str, tree: Pytree, step: int,
+         extra: Optional[Dict] = None) -> str:
+    """Write ``tree`` under ``ckpt_dir/step_{step}``; returns the path."""
+    dest = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_ckpt_")
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        name = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, name), np.asarray(leaf))
+        manifest["leaves"].append({
+            "path": _path_str(path), "file": name,
+            "dtype": str(np.asarray(leaf).dtype),
+            "shape": list(np.asarray(leaf).shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(dest):
+        shutil.rmtree(dest)
+    os.rename(tmp, dest)
+    return dest
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Pytree, step: Optional[int] = None
+            ) -> Tuple[Pytree, int, Dict]:
+    """Restore into the structure of ``like`` (dtype/shape-checked)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints in {ckpt_dir}"
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        entry = by_path.get(key)
+        assert entry is not None, f"checkpoint missing leaf {key}"
+        arr = np.load(os.path.join(src, entry["file"]))
+        assert list(arr.shape) == list(leaf.shape), \
+            f"{key}: shape {arr.shape} != {leaf.shape}"
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, leaves), manifest["step"], \
+        manifest["extra"]

@@ -1,0 +1,113 @@
+"""AdamW + schedules, pure JAX (no optax dependency).
+
+Optimizer state mirrors the param pytree (m, v in float32) so the same
+sharding rules apply to both — ``launch/sharding.py`` maps a param's
+PartitionSpec onto its optimizer slots verbatim, which is what makes
+the train-shape dry-run memory analysis meaningful.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # int32 scalar
+    m: Pytree                  # first moment  (f32, like params)
+    v: Pytree                  # second moment (f32, like params)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to ``min_lr_frac·lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _decay_mask(path: Tuple, leaf) -> bool:
+    """Weight decay applies to matrices only (no norms/biases/scalars)."""
+    names = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+    name = str(names[-1]) if names else ""
+    if leaf.ndim <= 1:
+        return False
+    return not any(s in name for s in ("norm", "ln", "bias", "a_log",
+                                       "dt_bias", "d_skip"))
+
+
+def apply_updates(params: Pytree, grads: Pytree, state: AdamWState,
+                  cfg: AdamWConfig) -> Tuple[Pytree, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _decay_mask(path, p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state.m)
+    v_leaves = jax.tree.leaves(state.v)
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat, g_leaves, m_leaves, v_leaves):
+        p2, m2, v2 = upd(path, p, g, m, v)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    params2 = jax.tree.unflatten(treedef, new_p)
+    state2 = AdamWState(step=step, m=jax.tree.unflatten(treedef, new_m),
+                        v=jax.tree.unflatten(treedef, new_v))
+    return params2, state2, {"lr": lr, "grad_norm": gnorm}

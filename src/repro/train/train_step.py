@@ -1,0 +1,75 @@
+"""Training step: CE loss → grad → AdamW update (donated buffers).
+
+``make_train_step`` returns the pure function lowered by both the real
+CPU trainer (examples/train_small.py) and the 512-device dry-run — one
+definition, two scales.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer
+from repro.train.optimizer import AdamWConfig, AdamWState, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    remat: bool = True, microbatches: int = 1) -> Callable:
+    """``microbatches > 1`` splits the global batch and accumulates
+    gradients in f32 over a ``lax.scan`` — one optimizer update per
+    step.  Used for the largest models (command-r-104b, qwen3-moe-235b)
+    where a full 256×4k batch's activations don't fit 16 GiB/chip even
+    with remat + sequence sharding (EXPERIMENTS.md §Perf)."""
+
+    def loss_of(p, tokens, labels, prefix_emb):
+        return transformer.loss_fn(p, cfg, tokens, labels,
+                                   prefix_emb=prefix_emb, remat=remat)
+
+    def train_step(params, opt_state: AdamWState, tokens, labels,
+                   prefix_emb=None):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens,
+                                                      labels, prefix_emb)
+        else:
+            M = microbatches
+            B = tokens.shape[0]
+            assert B % M == 0
+            tk = tokens.reshape(M, B // M, *tokens.shape[1:])
+            lb = labels.reshape(M, B // M, *labels.shape[1:])
+            pf = None if prefix_emb is None else \
+                prefix_emb.reshape(M, B // M, *prefix_emb.shape[1:])
+
+            def micro(acc, xs):
+                loss_acc, g_acc = acc
+                t, l = xs[0], xs[1]
+                pe = xs[2] if len(xs) > 2 else None
+                loss, g = jax.value_and_grad(loss_of)(params, t, l, pe)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / M, g_acc, g)
+                return (loss_acc + loss / M, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            xs = (tk, lb) if pf is None else (tk, lb, pf)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), g0), xs)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads,
+                                 params)
+        params2, opt_state2, info = apply_updates(params, grads, opt_state,
+                                                  opt)
+        metrics = {"loss": loss, **info}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, tokens, labels, prefix_emb=None):
+        loss = transformer.loss_fn(params, cfg, tokens, labels,
+                                   prefix_emb=prefix_emb, remat=False)
+        return {"loss": loss}
+
+    return eval_step

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU
+device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+# determinism + smaller compile cache churn
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+ALL_ARCHS = [
+    "musicgen-medium", "qwen2-7b", "granite-moe-3b-a800m", "zamba2-1.2b",
+    "qwen3-14b", "phi-3-vision-4.2b", "command-r-plus-104b", "mamba2-2.7b",
+    "qwen3-moe-235b-a22b", "deepseek-coder-33b",
+]

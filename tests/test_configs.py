@@ -1,0 +1,123 @@
+"""Assigned-architecture configs: exact fields, derived quantities,
+tensor-parallel geometry."""
+import math
+
+import pytest
+
+from repro import configs
+from repro.config import SHAPES, tp_geometry
+from repro.launch.sharding import physical_config
+
+from conftest import ALL_ARCHS
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment table
+ASSIGNED = {
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_assigned_fields(arch):
+    cfg = configs.get(arch)
+    L, d, h, kv, f, v = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == f
+    assert cfg.vocab_size == v
+    assert cfg.source, "every config must cite its source"
+
+
+def test_moe_fields():
+    g = configs.get("granite-moe-3b-a800m")
+    assert g.moe.n_experts == 32 and g.moe.top_k == 8
+    q = configs.get("qwen3-moe-235b-a22b")
+    assert q.moe.n_experts == 128 and q.moe.top_k == 8
+
+
+def test_ssm_fields():
+    m = configs.get("mamba2-2.7b")
+    assert m.ssm.d_state == 128 and m.family == "ssm"
+    z = configs.get("zamba2-1.2b")
+    assert z.ssm.d_state == 64 and z.family == "hybrid"
+    assert z.shared_attn and z.attn_every == 6
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_scale(arch):
+    """Analytic parameter counts land in the model's nominal bucket."""
+    expected = {
+        "musicgen-medium": (1.1e9, 2.2e9),
+        "qwen2-7b": (6e9, 8.5e9),
+        "granite-moe-3b-a800m": (2e9, 4e9),
+        "zamba2-1.2b": (0.9e9, 1.9e9),
+        "qwen3-14b": (12e9, 16.5e9),
+        "phi-3-vision-4.2b": (3.3e9, 4.6e9),
+        "command-r-plus-104b": (90e9, 115e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "qwen3-moe-235b-a22b": (200e9, 250e9),
+        "deepseek-coder-33b": (28e9, 36e9),
+    }[arch]
+    n = configs.get(arch).param_count()
+    assert expected[0] <= n <= expected[1], f"{arch}: {n:.3e}"
+
+
+def test_active_params_moe():
+    q = configs.get("qwen3-moe-235b-a22b")
+    act = q.active_param_count()
+    assert 15e9 <= act <= 30e9, f"A22B point: {act:.3e}"
+    assert act < q.param_count() / 5
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_variants(arch):
+    r = configs.get_reduced(arch)
+    assert r.n_layers <= 4
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.n_experts <= 4
+    assert r.family == configs.get(arch).family
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("tp", [8, 16])
+def test_tp_geometry_divides(arch, tp):
+    cfg = configs.get(arch)
+    if cfg.family == "ssm":
+        assert cfg.d_inner // cfg.ssm.head_dim % tp == 0
+        return
+    p = physical_config(cfg, tp)
+    assert p.n_heads % tp == 0
+    assert p.n_kv_heads % tp == 0
+    assert p.n_heads % p.n_kv_heads == 0
+    assert p.hd == cfg.hd
+    # padding never more than 2× q-head waste
+    assert p.n_heads <= 2 * max(cfg.n_heads, cfg.n_kv_heads)
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_kv_bytes_per_token():
+    q = configs.get("qwen2-7b")
+    # 2 (k,v) × 28 L × 4 kv × 128 hd × 2 B
+    assert q.kv_bytes_per_token() == 2 * 28 * 4 * 128 * 2
+    m = configs.get("mamba2-2.7b")
+    assert m.kv_bytes_per_token() == 0

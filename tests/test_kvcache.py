@@ -1,0 +1,136 @@
+"""Unified KV pool + block allocator: unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.config import BLOCK_TOKENS
+from repro.serving.kvcache import BlockAllocator, UnifiedKVPool
+
+
+# ---------------------------------------------------------------------------
+# allocator properties (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 64)),
+                min_size=1, max_size=80))
+def test_allocator_invariants(ops):
+    """Random alloc/free interleavings keep the free-space accounting
+    exact and ranges disjoint."""
+    alloc = BlockAllocator(1024)
+    live = []  # (start, n)
+    for is_alloc, n in ops:
+        if is_alloc:
+            s = alloc.alloc(n)
+            if s is not None:
+                assert 0 <= s and s + n <= 1024
+                for (s2, n2) in live:
+                    assert s + n <= s2 or s2 + n2 <= s, "overlap!"
+                live.append((s, n))
+        elif live:
+            s, n = live.pop(np.random.default_rng(n).integers(0, len(live)))
+            alloc.free(s, n)
+        assert alloc.used == sum(n for _, n in live)
+        assert alloc.free_blocks == 1024 - alloc.used
+    # free everything → one coalesced range
+    for s, n in live:
+        alloc.free(s, n)
+    assert alloc.free_blocks == 1024
+    assert alloc.largest_free_range() == 1024
+    assert alloc.fragmentation() == 0.0
+
+
+def test_allocator_exhaustion():
+    a = BlockAllocator(10)
+    assert a.alloc(8) == 0
+    assert a.alloc(4) is None          # doesn't fit
+    assert a.alloc(2) == 8
+    assert a.alloc(1) is None
+    a.free(0, 8)
+    assert a.alloc(8) == 0
+
+
+# ---------------------------------------------------------------------------
+# pool + per-model views
+# ---------------------------------------------------------------------------
+def _pool(n_blocks=4096, hd=64):
+    return UnifiedKVPool(n_blocks, hd)
+
+
+def test_view_quota_enforced():
+    pool = _pool()
+    cfg = configs.get_reduced("qwen2-7b")
+    group = cfg.n_layers * cfg.n_kv_heads
+    view = pool.register_model(cfg, quota=group * 4)  # 4 token-blocks
+    assert view.append_tokens(0, BLOCK_TOKENS * 4)     # exactly quota
+    assert view.used == group * 4
+    assert not view.append_tokens(0, 1), "over quota must fail"
+    view.free_seq(0)
+    assert view.used == 0
+    assert pool.allocator.used == 0
+
+
+def test_two_models_share_pool():
+    """Two different reduced models allocate from one arena."""
+    pool = _pool()
+    a = configs.get_reduced("qwen2-7b")
+    b = configs.get_reduced("musicgen-medium")
+    va = pool.register_model(a, quota=2048)
+    vb = pool.register_model(b, quota=2048)
+    assert va.append_tokens(0, 40)
+    assert vb.append_tokens(0, 40)
+    assert pool.allocator.used == va.used + vb.used
+    va.free_seq(0)
+    vb.free_seq(0)
+    assert pool.allocator.used == 0
+
+
+def test_quota_adaptation_moves_to_hot_model():
+    pool = _pool(8192)
+    a = configs.get_reduced("qwen2-7b")
+    b = configs.get_reduced("deepseek-coder-33b")
+    va = pool.register_model(a, quota=256)
+    vb = pool.register_model(b, quota=256)
+    # b is busy (>20% of quota), a idle
+    for i in range(6):
+        assert vb.append_tokens(i, 64)
+    q_a, q_b = va.quota, vb.quota
+    pool.adapt_quotas()
+    assert vb.quota > q_b and va.quota < q_a, \
+        "quota must flow from idle to busy LLM (Alg. 3)"
+
+
+def test_ssm_state_accounted():
+    pool = _pool()
+    m = configs.get_reduced("mamba2-2.7b")
+    v = pool.register_model(m, quota=1024)
+    assert v.group_size == 0                     # no attention blocks
+    assert v._ssm_blocks_per_seq > 0
+    assert v.append_tokens(0, 100)
+    assert v.used == v._ssm_blocks_per_seq      # O(1) in tokens
+    v.append_tokens(0, 400)
+    assert v.used == v._ssm_blocks_per_seq
+    v.free_seq(0)
+    assert v.used == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=12))
+def test_block_table_roundtrip(lens):
+    pool = _pool(65536)
+    cfg = configs.get_reduced("qwen3-14b")
+    view = pool.register_model(cfg, quota=65536)
+    ok_ids = []
+    for sid, n in enumerate(lens):
+        if view.append_tokens(sid, n):
+            ok_ids.append(sid)
+    tbl = view.block_table(ok_ids, max_blocks=16)
+    sl = view.seq_lens(ok_ids)
+    for i, sid in enumerate(ok_ids):
+        n_blocks = -(-lens[sid] // BLOCK_TOKENS)
+        got = (tbl[i] >= 0).sum()
+        assert got == min(n_blocks, 16)
+        assert sl[i] == lens[sid]
+    for sid in ok_ids:
+        view.free_seq(sid)
+    assert pool.allocator.used == 0

@@ -1,0 +1,172 @@
+"""Placement (Alg. 1 + Alg. 2) and throughput estimator (Eq. 3)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.costmodel import A100, TPU_V5E
+from repro.core.estimator import (LLMSpec, request_throughput, solve_batch,
+                                  token_block_usage, unit_throughput)
+from repro.core.placement import (mesh_groups, parallel_candidates, place,
+                                  place_memory_greedy, place_spatial)
+from repro.core.workload import llama_config
+
+
+# ---------------------------------------------------------------------------
+# cost model (Fig. 3 reproduction properties)
+# ---------------------------------------------------------------------------
+def test_decode_latency_flat_in_f():
+    """Decode is memory-bound: halving compute fraction changes latency
+    far less than prefill (paper Fig. 3)."""
+    cfg = llama_config("llama-7b")
+    d_full = cm.decode_latency(cfg, 16, 400, f=1.0)
+    d_half = cm.decode_latency(cfg, 16, 400, f=0.5)
+    p_full = cm.prefill_latency(cfg, 1, 512, f=1.0)
+    p_half = cm.prefill_latency(cfg, 1, 512, f=0.5)
+    decode_blowup = d_half / d_full
+    prefill_blowup = p_half / p_full
+    assert decode_blowup < 1.2, "decode should be ~flat in f"
+    assert prefill_blowup > 1.8, "prefill should scale ~1/f"
+
+
+def test_tp_reduces_prefill_latency():
+    cfg = llama_config("llama-30b")
+    t1 = cm.prefill_latency(cfg, 1, 1024, tp=1)
+    t4 = cm.prefill_latency(cfg, 1, 1024, tp=4)
+    assert t4 < t1
+
+
+def test_weight_devices_needed():
+    big = llama_config("llama-65b")
+    assert cm.weight_devices_needed(big, A100) >= 3
+    small = llama_config("llama-7b")
+    assert cm.weight_devices_needed(small, A100) == 1
+    # v5e has 16GB → 7B bf16 needs 2
+    assert cm.weight_devices_needed(small, TPU_V5E) >= 2
+
+
+# ---------------------------------------------------------------------------
+# estimator (Eq. 3)
+# ---------------------------------------------------------------------------
+def _spec(name="llama-7b", rate=4.0, **kw):
+    return LLMSpec(llama_config(name), rate, **kw)
+
+
+def test_throughput_capped_by_rate():
+    s = _spec(rate=0.5)
+    t = request_throughput(s, 64, [s])
+    assert t <= 0.5 + 1e-9
+
+
+def test_throughput_monotone_in_batch():
+    s = _spec(rate=1e9)  # uncapped
+    ts = [request_throughput(s, b, [s]) for b in (1, 4, 16, 64)]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+def test_solve_batch_meets_rate():
+    s = _spec(rate=2.0)
+    b, t = solve_batch(s, [s])
+    assert t >= 2.0 - 1e-9
+    if b > 1:
+        assert request_throughput(s, b - 1, [s]) < 2.0
+
+
+def test_colocation_lowers_single_llm_throughput():
+    """Eq. 3: other LLMs' prefills serialize into the denominator."""
+    a = _spec(rate=1e9)
+    b = LLMSpec(llama_config("llama-13b"), 1e9)
+    alone = request_throughput(a, 32, [a])
+    shared = request_throughput(a, 32, [a, b])
+    assert shared < alone
+
+
+def test_token_block_usage_normalized_by_rate():
+    lo = _spec(rate=1.0)
+    hi = _spec(rate=10.0)
+    assert token_block_usage(lo, 16) > token_block_usage(hi, 16)
+
+
+def test_unit_throughput_memory_infeasible():
+    specs = [LLMSpec(llama_config("llama-65b", tag=f"-{i}"), 1.0)
+             for i in range(8)]
+    assert unit_throughput(specs, 1, A100) == float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 candidates
+# ---------------------------------------------------------------------------
+def test_parallel_candidates_minimal_sm():
+    cfg = llama_config("llama-7b")
+    cands = parallel_candidates(cfg, rate=1.0, max_tp=8)
+    assert cands, "must produce candidates"
+    for c in cands:
+        assert c.tp in (1, 2, 4, 8)
+        # Alg. 2: smallest fraction that meets the rate → lowering it
+        # one notch must miss the rate (when f > 0.1 met the rate)
+    tps = [c.tp for c in cands]
+    assert len(set(tps)) == len(tps), "one candidate per TP degree"
+
+
+def test_candidates_fraction_decreases_with_tp():
+    """More TP → each device needs a smaller compute fraction."""
+    cfg = llama_config("llama-13b")
+    cands = parallel_candidates(cfg, rate=2.0, max_tp=8)
+    by_tp = {c.tp: c.sm_frac for c in cands}
+    if 1 in by_tp and 8 in by_tp:
+        assert by_tp[8] <= by_tp[1]
+
+
+# ---------------------------------------------------------------------------
+# mesh-group enumeration
+# ---------------------------------------------------------------------------
+def test_mesh_groups_partition():
+    groups = mesh_groups(16, node_size=8)
+    assert groups
+    for g in groups:
+        assert sum(g) == 16
+        assert all(s in (1, 2, 4, 8) for s in g)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 end-to-end placement
+# ---------------------------------------------------------------------------
+def _skewed_models(n_small=3, rate_hot=12.0, rate_cold=0.4):
+    ms = [(llama_config("llama-7b", f"-{i}"),
+           rate_hot if i == 0 else rate_cold) for i in range(n_small)]
+    ms.append((llama_config("llama-30b", "-x"), rate_cold))
+    return ms
+
+
+def test_place_covers_all_models():
+    models = _skewed_models()
+    pl = place(models, n_devices=8, group_limit=64)
+    placed = [s.name for m in pl.meshes for s in m.specs]
+    assert sorted(placed) == sorted(cfg.name for cfg, _ in models)
+    assert sum(m.n_devices for m in pl.meshes) == 8
+    assert math.isfinite(pl.total_tpt) and pl.total_tpt > 0
+
+
+def test_place_beats_memory_greedy_on_skewed():
+    """Fig. 8: computation-first placement ≥ memory-greedy."""
+    models = _skewed_models()
+    a = place(models, n_devices=8, group_limit=64).total_tpt
+    b = place_memory_greedy(models, n_devices=8).total_tpt
+    assert a >= b * 0.999, (a, b)
+
+
+def test_place_beats_spatial_on_skewed():
+    """Colocation must not lose to dedicated GPUs under skew."""
+    models = _skewed_models()
+    a = place(models, n_devices=8, group_limit=64).total_tpt
+    c = place_spatial(models, n_devices=8).total_tpt
+    assert a >= c * 0.95, (a, c)
+
+
+def test_spatial_gives_every_model_own_mesh():
+    models = _skewed_models()
+    pl = place_spatial(models, n_devices=16)
+    assert len(pl.meshes) == len(models)
+    for m in pl.meshes:
+        assert len(m.specs) == 1

@@ -1,0 +1,150 @@
+"""int8 serving quantization (§Perf W8/KV8 variant) + seq-parallel SSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.launch import steps
+from repro.models.mamba2 import (causal_conv, causal_conv_slabbed,
+                                 ssd_chunked, ssd_seq_parallel)
+from repro.models.transformer import init_params
+from repro.serving.quantize import (QLayerView, qmatmul, quantize_kv,
+                                    dequantize_kv, quantize_params,
+                                    quantize_tensor)
+
+
+def test_quantize_tensor_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 3.0
+    q, s = quantize_tensor(w, axis=-1)
+    assert q.dtype == jnp.int8
+    back = q.astype(jnp.float32) * s
+    rel = float(jnp.abs(back - w).max() / jnp.abs(w).max())
+    assert rel < 0.01, rel
+
+
+def test_qmatmul_matches_dequant():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (4, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32)) * 2.0
+    q, s = quantize_tensor(w, axis=-1)
+    y1 = qmatmul(x, q, s)
+    y2 = x @ (q.astype(jnp.float32) * s)
+    # qmatmul runs the GEMM in bf16 — bound the error relative to the
+    # output magnitude rather than elementwise
+    rel = float(np.abs(np.asarray(y1, np.float32) - np.asarray(y2)).max()
+                / np.abs(np.asarray(y2)).max())
+    assert rel < 0.05, rel
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000))
+def test_kv_quant_roundtrip(seed):
+    k = jax.random.normal(jax.random.PRNGKey(seed), (2, 3, 16)) * 5
+    q, s = quantize_kv(k)
+    back = dequantize_kv(q, s)
+    assert float(jnp.abs(back - k).max()) < float(jnp.abs(k).max()) * 0.02
+
+
+def test_quantize_params_structure():
+    cfg = configs.get_reduced("qwen2-7b")
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    qp = quantize_params(params)
+    assert "wq_q" in qp["layers"] and "wq_s" in qp["layers"]
+    assert qp["layers"]["wq_q"].dtype == jnp.int8
+    assert "ln1" in qp["layers"]            # norms untouched
+    assert "embed_q" in qp["tok"]
+    # QLayerView dequantizes per layer
+    view = QLayerView(qp["layers"], 0)
+    w = view["wq"]
+    assert w.shape == (1,) + params["layers"]["wq"].shape[1:]
+    rel = float(jnp.abs(w[0].astype(jnp.float32)
+                        - params["layers"]["wq"][0]).max())
+    assert rel < float(jnp.abs(params["layers"]["wq"][0]).max()) * 0.02
+
+
+@pytest.mark.parametrize("arch", ["deepseek-coder-33b",
+                                  "command-r-plus-104b", "qwen3-14b"])
+def test_w8kv8_decode_matches_bf16(arch):
+    """W8/KV8 decode: small relative logit error, same greedy tokens."""
+    cfg = configs.get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    qparams = quantize_params(params)
+    B, Sp, n_new = 2, 16, 3
+    Sc = Sp + n_new
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, Sp), 0,
+                              cfg.vocab_size)
+    lens = jnp.full((B,), Sp, jnp.int32)
+    out = steps.make_prefill_step(cfg)(params, toks, lens)
+    dec_q = steps.make_decode_step_w8kv8(cfg)
+    dec_f = steps.make_decode_step(cfg)
+
+    pk, pv = out["cache_k"], out["cache_v"]
+    amax = jnp.abs(pk).max(-1)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    ck = jnp.zeros((cfg.n_layers, B, Sc, cfg.n_kv_heads, cfg.hd),
+                   jnp.int8)
+    ck = ck.at[:, :, :Sp].set(
+        jnp.clip(jnp.round(pk / s[..., None]), -127, 127).astype(jnp.int8))
+    sk = jnp.zeros((cfg.n_layers, B, Sc, cfg.n_kv_heads), jnp.float32)
+    sk = sk.at[:, :, :Sp].set(s)
+    amax = jnp.abs(pv).max(-1)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    cv = jnp.zeros_like(ck)
+    cv = cv.at[:, :, :Sp].set(
+        jnp.clip(jnp.round(pv / s[..., None]), -127, 127).astype(jnp.int8))
+    sv = jnp.zeros_like(sk)
+    sv = sv.at[:, :, :Sp].set(s)
+    ckf = jnp.zeros((cfg.n_layers, B, Sc, cfg.n_kv_heads, cfg.hd),
+                    jnp.float32).at[:, :, :Sp].set(pk)
+    cvf = jnp.zeros_like(ckf).at[:, :, :Sp].set(pv)
+
+    logits_f = out["logits"]
+    for t in range(n_new):
+        nxt = jnp.argmax(logits_f, -1).astype(jnp.int32)
+        lens2 = jnp.full((B,), Sp + t + 1, jnp.int32)
+        oq = dec_q(qparams, ck, cv, sk, sv, nxt, lens2)
+        of = dec_f(params, ckf, cvf, nxt, lens2)
+        ck, cv, sk, sv = (oq["cache_k"], oq["cache_v"], oq["scale_k"],
+                          oq["scale_v"])
+        logits_f, ckf, cvf = of["logits"], of["cache_k"], of["cache_v"]
+        rel = float(jnp.abs(oq["logits"] - logits_f).max()
+                    / jnp.abs(logits_f).max())
+        assert rel < 0.1, f"{arch} step {t}: rel err {rel}"
+        agree = float((jnp.argmax(oq["logits"], -1)
+                       == jnp.argmax(logits_f, -1)).mean())
+        assert agree == 1.0, f"{arch}: greedy tokens must agree"
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel SSD + slabbed conv (§Perf, mamba2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("slabs", [2, 4, 8])
+def test_ssd_seq_parallel_exact(slabs):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    b, s, h, p, n = 2, 128, 4, 16, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    B = jax.random.normal(ks[2], (b, s, 1, n))
+    C = jax.random.normal(ks[3], (b, s, 1, n))
+    d = jnp.ones((h,))
+    y1, f1 = ssd_chunked(x, dt, a_log, B, C, d, 16)
+    y2, f2 = ssd_seq_parallel(x, dt, a_log, B, C, d, 16, slabs=slabs)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("slabs", [2, 8])
+def test_causal_conv_slabbed_exact(slabs):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (2, 64, 12))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 12)) * 0.3
+    b = jnp.zeros((12,))
+    y1 = causal_conv(x, w, b)
+    y2 = causal_conv_slabbed(x, w, b, slabs=slabs)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)

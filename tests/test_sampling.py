@@ -1,0 +1,54 @@
+"""Sampling properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.sampling import SamplingConfig, sample
+
+
+def test_greedy():
+    logits = jnp.array([[0.1, 3.0, -1.0], [2.0, 0.0, 5.0]])
+    out = sample(logits, jax.random.PRNGKey(0), SamplingConfig())
+    np.testing.assert_array_equal(np.asarray(out), [1, 2])
+
+
+def test_top_k_masks():
+    logits = jnp.array([[0.0, 1.0, 2.0, 3.0]])
+    cfg = SamplingConfig(temperature=1.0, top_k=2)
+    outs = {int(sample(logits, jax.random.PRNGKey(i), cfg)[0])
+            for i in range(64)}
+    assert outs <= {2, 3}
+
+
+def test_top_p_masks():
+    # one dominant token: p=0.9 keeps only it
+    logits = jnp.array([[10.0, 0.0, 0.0, 0.0]])
+    cfg = SamplingConfig(temperature=1.0, top_p=0.9)
+    outs = {int(sample(logits, jax.random.PRNGKey(i), cfg)[0])
+            for i in range(32)}
+    assert outs == {0}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sample_in_vocab(seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (3, 17))
+    for cfg in (SamplingConfig(), SamplingConfig(temperature=0.7),
+                SamplingConfig(temperature=1.0, top_k=5),
+                SamplingConfig(temperature=1.0, top_p=0.8)):
+        out = sample(logits, key, cfg)
+        assert out.shape == (3,)
+        assert ((np.asarray(out) >= 0) & (np.asarray(out) < 17)).all()
+
+
+def test_temperature_sharpens():
+    logits = jnp.array([[0.0, 1.0]])
+    hot = sum(int(sample(logits, jax.random.PRNGKey(i),
+                         SamplingConfig(temperature=5.0))[0])
+              for i in range(200))
+    cold = sum(int(sample(logits, jax.random.PRNGKey(i),
+                          SamplingConfig(temperature=0.1))[0])
+               for i in range(200))
+    assert cold >= hot  # low temperature picks argmax more often

@@ -1,0 +1,60 @@
+"""Workload generation (paper §4.1–4.2, Table 1, Fig. 6)."""
+import numpy as np
+import pytest
+
+from repro.core.workload import (chatlmsys_like, cumulative_rate_distribution,
+                                 power_law_rates, sharegpt_lengths,
+                                 synthesize, table1_models)
+
+
+def test_table1_mix():
+    models = table1_models()
+    assert len(models) == 19                     # 12 + 4 + 2 + 1
+    sizes = [m.param_count() for m in models]
+    assert sum(1 for s in sizes if s < 8e9) == 12
+    assert sum(1 for s in sizes if s > 41e9) == 1
+
+
+def test_power_law_skew():
+    names = [f"m{i}" for i in range(20)]
+    r_low = power_law_rates(names, alpha=0.9, max_rate=20)
+    r_high = power_law_rates(names, alpha=2.1, max_rate=20)
+    cdf_low = cumulative_rate_distribution(r_low)
+    cdf_high = cumulative_rate_distribution(r_high)
+    top20 = max(1, len(names) // 5)
+    # paper: α=0.9 → top 20% take ~50%; α=2.1 → ~90%
+    assert 0.35 <= cdf_low[top20 - 1] <= 0.65
+    assert cdf_high[top20 - 1] >= 0.8
+    assert cdf_high[top20 - 1] > cdf_low[top20 - 1]
+
+
+def test_max_rate_respected():
+    r = power_law_rates([f"m{i}" for i in range(10)], 1.3, max_rate=20)
+    assert np.isclose(max(r.values()), 20)
+
+
+def test_poisson_arrival_counts():
+    wl = synthesize([f"m{i}" for i in range(4)], alpha=1.0, max_rate=8.0,
+                    horizon=200.0, seed=0)
+    for m, rate in wl.rates.items():
+        n = sum(1 for r in wl.requests if r.model == m)
+        expect = rate * wl.horizon
+        assert abs(n - expect) < 5 * np.sqrt(expect) + 5, (m, n, expect)
+    arr = [r.arrival for r in wl.requests]
+    assert arr == sorted(arr)
+
+
+def test_sharegpt_lengths():
+    rng = np.random.default_rng(0)
+    p, o = sharegpt_lengths(rng, 20000)
+    assert 100 <= p.mean() <= 240            # mean prompt ≈ 161
+    assert 230 <= o.mean() <= 470            # mean output ≈ 338
+    assert p.min() >= 4 and p.max() <= 2048
+
+
+def test_chatlmsys_like():
+    wl = chatlmsys_like(n_models=16, horizon=100.0, avg_rate=2.0, seed=1)
+    assert len(wl.rates) == 16
+    cdf = cumulative_rate_distribution(wl.rates)
+    assert 0.3 <= cdf[2] <= 0.75              # ~20% models ≈ 50% traffic
+    assert len(wl.requests) > 0
