@@ -19,8 +19,8 @@ def main() -> int:
 
     from benchmarks import (fig3_compute_fraction, fig5_synthetic,
                             fig7_real, fig8_placement, fig9_adbs,
-                            fig10_manager, fig11_p99, kernel_bench,
-                            roofline)
+                            fig10_manager, fig11_p99, fused_tick,
+                            kernel_bench, roofline)
     jobs = [
         ("fig3_compute_fraction", lambda: fig3_compute_fraction.run()),
         ("fig5_synthetic", lambda: fig5_synthetic.run(args.quick)),
@@ -29,6 +29,7 @@ def main() -> int:
         ("fig9_adbs", lambda: fig9_adbs.run(args.quick)),
         ("fig10_manager", lambda: fig10_manager.run(args.quick)),
         ("fig11_p99", lambda: fig11_p99.run(args.quick)),
+        ("fused_tick", lambda: fused_tick.run(args.quick)),
         ("kernel_bench", lambda: kernel_bench.run(args.quick)),
         ("roofline_16x16", lambda: roofline.run("16x16")),
         ("roofline_2x16x16", lambda: roofline.run("2x16x16")),

@@ -1,0 +1,12 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in
+newer jax releases; resolve whichever this interpreter ships so the
+kernels import (and run in interpret mode) on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -28,6 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+from repro.paging import resolve_physical_blocks
+
 NEG_INF = -1e30
 
 
@@ -72,29 +75,30 @@ def _paged_kernel(phys_ref, lens_ref,                # scalar prefetch
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n_kv", "interpret"))
-def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, *,
-                           n_kv: int, interpret: bool = False):
-    """Decode attention against the paged pool.
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens, *,
+                                 interpret: bool = False):
+    """Multi-sequence decode attention over pre-resolved physical blocks.
 
-    q: [B, H, hd] (one post-RoPE query token per sequence)
+    The fused multi-LLM tick (DESIGN.md §2) concatenates the decode
+    rows of every colocated same-architecture engine into one batch;
+    each row's ``phys`` entries already carry the (model, layer) →
+    physical-id resolution from the unified pool, so one kernel sweep
+    serves all colocated LLMs at once instead of one launch per model.
+
+    q: [B, H, hd] (one post-RoPE query token per row; rows may belong
+        to different models)
     pool_k/v: [N, BT, hd] head-block arena
-    table: [B, max_blocks] int32 group bases (−1 padded)
+    phys: [B, n_kv, max_blocks] int32 physical head-block ids (invalid
+        entries must point at a valid block — e.g. 0 — and be masked
+        via seq_lens)
     seq_lens: [B] (length including the current token)
-    layer: int32 scalar — attention-layer cache index
     """
     B, H, hd = q.shape
     N, BT, _ = pool_k.shape
-    max_blocks = table.shape[1]
+    n_kv, max_blocks = phys.shape[1], phys.shape[2]
     group = H // n_kv
     scale = 1.0 / math.sqrt(hd)
-
-    # physical head-block id per (b, kv_head, token_block); padded table
-    # entries point at block 0 but are masked by seq_lens in-kernel.
-    layer = jnp.asarray(layer, jnp.int32)
-    phys = (jnp.maximum(table, 0)[:, None, :] + layer * n_kv
-            + jnp.arange(n_kv, dtype=jnp.int32)[None, :, None])
-    phys = jnp.where(table[:, None, :] >= 0, phys, 0).astype(jnp.int32)
 
     qt = q.reshape(B, n_kv, group, hd)
     kernel = functools.partial(_paged_kernel, bt=BT, n_blocks=max_blocks,
@@ -124,8 +128,26 @@ def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, n_kv, group, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(phys, seq_lens, qt, pool_k, pool_v)
     return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv", "interpret"))
+def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, *,
+                           n_kv: int, interpret: bool = False):
+    """Decode attention against the paged pool (single-model view).
+
+    q: [B, H, hd] (one post-RoPE query token per sequence)
+    pool_k/v: [N, BT, hd] head-block arena
+    table: [B, max_blocks] int32 group bases (−1 padded)
+    seq_lens: [B] (length including the current token)
+    layer: int32 scalar — attention-layer cache index
+    """
+    # padded table entries resolve to block 0 but are masked by
+    # seq_lens in-kernel (shared resolution with the XLA oracle)
+    phys = resolve_physical_blocks(table, layer, n_kv)
+    return fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens,
+                                        interpret=interpret)

@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+from repro.paging import resolve_physical_blocks
+
 NEG_INF = -1e30
 
 
@@ -77,10 +80,7 @@ def paged_decode_attention_int8(q, pool_k, pool_v, pool_sk, pool_sv,
     group = H // n_kv
     scale = 1.0 / math.sqrt(hd)
 
-    layer = jnp.asarray(layer, jnp.int32)
-    phys = (jnp.maximum(table, 0)[:, None, :] + layer * n_kv
-            + jnp.arange(n_kv, dtype=jnp.int32)[None, :, None])
-    phys = jnp.where(table[:, None, :] >= 0, phys, 0).astype(jnp.int32)
+    phys = resolve_physical_blocks(table, layer, n_kv)
 
     qt = q.reshape(B, n_kv, group, hd)
     # scales carried as [N, BT, 1] so the lane dim exists for VMEM tiles
@@ -120,7 +120,7 @@ def paged_decode_attention_int8(q, pool_k, pool_v, pool_sk, pool_sv,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, n_kv, group, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(phys, seq_lens, qt, pool_k, pool_v, sk, sv)

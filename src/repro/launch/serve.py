@@ -3,6 +3,10 @@
 Colocates the requested architectures' REDUCED variants on one unified
 KV pool and serves a synthetic Poisson workload with the chosen
 scheduling policy — the end-to-end MuxServe pipeline at laptop scale.
+``--fused`` runs the fused multi-LLM decode tick (DESIGN.md §2): one
+jitted sweep per tick for same-architecture engines instead of
+back-to-back per-engine steps.  Repeating an arch (e.g.
+``--archs qwen2-7b,qwen2-7b``) colocates independent instances.
 
   PYTHONPATH=src python -m repro.launch.serve \
       --archs qwen2-7b,mamba2-2.7b --policy adbs --rate 2.0 \
@@ -19,11 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.config import replace
 from repro.models.transformer import init_params
 from repro.serving.engine import Engine, Request
 from repro.serving.kvcache import UnifiedKVPool
 from repro.serving.mux import MuxScheduler
-from repro.serving.sampling import SamplingConfig
 
 
 def build_unit(archs: List[str], pool_blocks: int = 400_000,
@@ -33,6 +37,10 @@ def build_unit(archs: List[str], pool_blocks: int = 400_000,
     engines: Dict[str, Engine] = {}
     for i, a in enumerate(archs):
         cfg = configs.get_reduced(a)
+        if cfg.name in engines:
+            # repeated arch → colocate a distinct instance (own weights,
+            # own quota) under a unique engine name
+            cfg = replace(cfg, name=f"{cfg.name}#{i}")
         params = init_params(jax.random.PRNGKey(seed + i), cfg,
                              jnp.float32)
         view = pool.register_model(cfg, pool_blocks // len(archs))
@@ -70,16 +78,29 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk-tokens", type=int, default=0,
                     help="chunked prefill window (0 = whole-prompt jobs)")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused multi-LLM decode tick (one jitted sweep "
+                         "for same-architecture engines per tick)")
     args = ap.parse_args()
 
     archs = args.archs.split(",")
     engines, pool = build_unit(archs, seed=args.seed,
                                chunk_tokens=args.chunk_tokens)
-    mux = MuxScheduler(engines, pool, policy=args.policy)
+    if args.fused and args.policy == "fcfs":
+        # fcfs is the temporal-multiplexing baseline: one LLM at a
+        # time, nothing to fuse — don't pretend otherwise
+        print("[serve] --fused has no effect under --policy fcfs; "
+              "ignoring")
+        args.fused = False
+    mux = MuxScheduler(engines, pool, policy=args.policy, fused=args.fused)
     reqs = synth_requests(engines, args.rate, args.horizon, args.max_new,
                           args.seed)
     print(f"[serve] {len(reqs)} requests for {len(archs)} colocated LLMs, "
-          f"policy={args.policy}")
+          f"policy={args.policy}, fused={args.fused}")
+    if args.fused:
+        for g in mux.fused_groups:
+            print(f"[serve] fused group ({len(g.engines)} engines): "
+                  f"{[e.cfg.name for e in g.engines]}")
 
     t0 = time.perf_counter()
     idx = 0

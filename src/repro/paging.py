@@ -1,0 +1,28 @@
+"""Shared paged-KV index arithmetic (layer-neutral).
+
+Physical head-block id for (token-block base b, layer l, kv head h) of
+a model with KV kv-heads: ``b + l*KV + h`` (groups are contiguous —
+see serving/kvcache.py).  Both the XLA oracle (serving/cache_ops) and
+the Pallas kernels (kernels/paged_attention) resolve tables through
+this one function so the two layers can never disagree on the pool
+layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def resolve_physical_blocks(table, layer, n_kv):
+    """Resolve a group-base block table to physical head-block ids.
+
+    table: [B, max_blocks] int32 group bases (−1 padded)
+    Returns [B, n_kv, max_blocks] int32 physical ids (invalid → 0; the
+    caller masks those positions via seq_lens).  Rows of a *fused*
+    multi-LLM batch can come from different models as long as their
+    (layer, n_kv) resolution has already been applied here — this is
+    the per-row handoff point between the pool and the fused kernel.
+    """
+    layer = jnp.asarray(layer, jnp.int32)
+    phys = (jnp.maximum(table, 0)[:, None, :] + layer * n_kv
+            + jnp.arange(n_kv, dtype=jnp.int32)[None, :, None])
+    return jnp.where(table[:, None, :] >= 0, phys, 0).astype(jnp.int32)

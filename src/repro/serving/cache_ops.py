@@ -10,12 +10,16 @@ see serving/kvcache.py).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import BLOCK_TOKENS
+from repro.paging import resolve_physical_blocks
+
+__all__ = ["write_tokens", "resolve_physical_blocks",
+           "fused_paged_decode_attention", "paged_decode_attention",
+           "paged_chunk_attention", "windowed_decode_attention",
+           "write_window"]
 
 
 def write_tokens(pool_k, pool_v, k_new, v_new, table, start_pos, layer, n_kv):
@@ -46,28 +50,28 @@ def write_tokens(pool_k, pool_v, k_new, v_new, table, start_pos, layer, n_kv):
     return pool_k, pool_v
 
 
-def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
-    """Single-token decode attention against the paged pool (oracle).
+def fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens):
+    """Multi-sequence decode attention over pre-resolved physical blocks.
 
-    q: [B, H, hd] — one query token per sequence (post-RoPE)
+    The fused multi-LLM tick (DESIGN.md §2) flattens the decode rows of
+    all colocated same-architecture engines into one batch; each row's
+    ``phys`` entries already encode (model, layer) → physical id, so
+    the attention sweep itself is model-agnostic.
+
+    q: [B, H, hd] — one query token per row (post-RoPE)
     pool_k/v: [N, BT, hd]
-    table: [B, max_blocks]; seq_lens: [B] (length INCLUDING current token,
-    whose KV must already be written).
+    phys: [B, n_kv, max_blocks] int32 physical head-block ids
+    seq_lens: [B] (length INCLUDING the current token)
     Returns [B, H, hd].
     """
     B, H, hd = q.shape
     BT = pool_k.shape[1]
-    max_blocks = table.shape[1]
+    n_kv, max_blocks = phys.shape[1], phys.shape[2]
     group = H // n_kv
     scale = 1.0 / math.sqrt(hd)
 
-    base = jnp.maximum(table, 0)                               # [B,nb]
-    phys = (base[:, :, None] + layer * n_kv
-            + jnp.arange(n_kv)[None, None, :])                 # [B,nb,KV]
-    k = pool_k[phys]                                           # [B,nb,KV,BT,hd]
-    v = pool_v[phys]
-    k = k.transpose(0, 2, 1, 3, 4).reshape(B, n_kv, max_blocks * BT, hd)
-    v = v.transpose(0, 2, 1, 3, 4).reshape(B, n_kv, max_blocks * BT, hd)
+    k = pool_k[phys].reshape(B, n_kv, max_blocks * BT, hd)
+    v = pool_v[phys].reshape(B, n_kv, max_blocks * BT, hd)
 
     qh = q.reshape(B, n_kv, group, hd)
     scores = jnp.einsum("bkgd,bktd->bkgt", qh, k).astype(jnp.float32) * scale
@@ -77,6 +81,19 @@ def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgt,bktd->bkgd", probs, v)
     return out.reshape(B, H, hd)
+
+
+def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
+    """Single-token decode attention against the paged pool (oracle).
+
+    q: [B, H, hd] — one query token per sequence (post-RoPE)
+    pool_k/v: [N, BT, hd]
+    table: [B, max_blocks]; seq_lens: [B] (length INCLUDING current token,
+    whose KV must already be written).
+    Returns [B, H, hd].
+    """
+    phys = resolve_physical_blocks(table, layer, n_kv)
+    return fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens)
 
 
 def paged_chunk_attention(q, pool_k, pool_v, table, q_offset, layer, n_kv):
@@ -94,13 +111,9 @@ def paged_chunk_attention(q, pool_k, pool_v, table, q_offset, layer, n_kv):
     group = H // n_kv
     scale = 1.0 / math.sqrt(hd)
 
-    base = jnp.maximum(table, 0)
-    phys = (base[:, :, None] + layer * n_kv
-            + jnp.arange(n_kv)[None, None, :])               # [B,nb,KV]
-    k = pool_k[phys].transpose(0, 2, 1, 3, 4).reshape(
-        B, n_kv, max_blocks * BT, hd)
-    v = pool_v[phys].transpose(0, 2, 1, 3, 4).reshape(
-        B, n_kv, max_blocks * BT, hd)
+    phys = resolve_physical_blocks(table, layer, n_kv)       # [B,KV,nb]
+    k = pool_k[phys].reshape(B, n_kv, max_blocks * BT, hd)
+    v = pool_v[phys].reshape(B, n_kv, max_blocks * BT, hd)
 
     qh = q.reshape(B, C, n_kv, group, hd)
     scores = jnp.einsum("bckgd,bktd->bkgct", qh, k).astype(jnp.float32) \

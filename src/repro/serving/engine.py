@@ -3,8 +3,10 @@
 Mirrors MuxServe's runtime-engine design (§3.4): prefill and decode are
 *separate jobs* operating on shared weights and the unified KV pool.
 The global ADBS scheduler (serving/mux.py) decides which job runs each
-tick; on TPU the analogue of MPS SM-assignment is the fused multi-LLM
-step (DESIGN.md §2).
+tick; the analogue of MPS SM-assignment is the fused multi-LLM decode
+step (DESIGN.md §2) — ``export_decode_job`` / ``apply_decode_result``
+are this engine's half of that contract, ``_fused_decode_impl`` the
+stacked-weights sweep itself.
 
 The engine manages a fixed number of decode *slots* (continuous
 batching): a sequence occupies a slot from prefill completion until
@@ -13,10 +15,10 @@ finish, and its attention KV lives in the unified pool while SSM state
 """
 from __future__ import annotations
 
-import math
+import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +27,8 @@ import numpy as np
 from repro.config import BLOCK_TOKENS, ModelConfig
 from repro.models import mamba2 as M2
 from repro.models import moe as MoE
-from repro.models.layers import (attn_qkv, causal_attention, lm_logits, mlp,
-                                 rms_norm)
+from repro.models.layers import (attn_qkv, causal_attention, lm_logits,
+                                 mlp, rms_norm)
 from repro.serving import cache_ops
 from repro.serving.kvcache import ModelCacheView, UnifiedKVPool
 
@@ -50,6 +52,26 @@ class Request:
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+@dataclass
+class DecodeJob:
+    """One engine's decode rows for the current tick, in export form.
+
+    The fused multi-LLM tick (DESIGN.md §2) stacks the jobs of all
+    colocated same-architecture engines into a single jitted step; the
+    serial path consumes a job one engine at a time.  Block tables and
+    sequence lengths are resolved from the pool view at execution time
+    (``ModelCacheView.block_table`` / ``fused_block_tables``) so the
+    job stays valid across the padding decisions of either path.
+    """
+    slots: List[int]
+    reqs: List[Request]
+    seq_ids: List[int]
+    last_tok: np.ndarray          # [B] int32 — token decoded this step
+
+    def __len__(self) -> int:
+        return len(self.reqs)
 
 
 class Engine:
@@ -79,7 +101,10 @@ class Engine:
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.slot_seq: np.ndarray = np.full(max_slots, -1, np.int64)
         self.finished: List[Request] = []
+        self.preempted: List[Request] = []      # evicted by stall escape
         self._prefilling: Dict[int, int] = {}   # slot → next prompt pos
+        self._stall_ticks = 0
+        self._rolled_rows: List[int] = []
         self._next_seq = 0
         self._rng = np.random.default_rng(rng_seed)
 
@@ -117,17 +142,27 @@ class Engine:
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
-    def can_admit(self, req: Request) -> bool:
-        if not self.free_slots():
-            return False
+    def lifetime_blocks(self, req: Request) -> int:
+        """Head-blocks this request needs over its whole lifetime
+        (prompt + max_new tokens, plus SSM state pages)."""
         total = len(req.prompt) + req.max_new_tokens
-        # admission: quota for the whole request lifetime
-        fake_seq = -1
         blocks = -(-total // BLOCK_TOKENS) * self.view.group_size
         if self.cfg.ssm:
             blocks += self.view._ssm_blocks_per_seq
-        return blocks <= min(self.view.quota_headroom(),
-                             self.pool.allocator.free_blocks)
+        return blocks
+
+    def can_admit(self, req: Request, pending_blocks: int = 0) -> bool:
+        """Whether the request's whole-lifetime quota fits the current
+        headroom.  ``pending_blocks``: lifetime blocks of requests
+        already selected for the same batch but not yet reserved —
+        batch admission must accumulate it, or every candidate is
+        checked against the same un-decremented headroom and the batch
+        overcommits the quota."""
+        if not self.free_slots():
+            return False
+        return self.lifetime_blocks(req) + pending_blocks <= min(
+            self.view.quota_headroom(),
+            self.pool.allocator.free_blocks)
 
     # ------------------------------------------------------------------
     def prefill(self, reqs: List[Request]) -> int:
@@ -141,9 +176,11 @@ class Engine:
             return self._prefill_chunked(reqs)
         reqs = reqs[:len(self.free_slots())]
         admitted = []
+        pending = 0
         for r in reqs:
-            if self.can_admit(r):
+            if self.can_admit(r, pending):
                 admitted.append(r)
+                pending += self.lifetime_blocks(r)
         if not admitted:
             return 0
         B = len(admitted)
@@ -176,25 +213,35 @@ class Engine:
         # sample first token
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i, r in enumerate(admitted):
-            r.output.append(int(nxt[i]))
-            self.view.append_tokens(seq_ids[i], 1)  # reserve for new token
+            # reserve BEFORE committing the token: on quota overcommit
+            # (admission point-checks headroom per request) the token
+            # is dropped and decode regenerates it at the same
+            # position once blocks free up — never a silent desync
+            if self.view.append_tokens(seq_ids[i], 1):
+                r.output.append(int(nxt[i]))
         return int(lens.sum())
 
     # ------------------------------------------------------------------
     def _prefill_chunked(self, reqs: List[Request]) -> int:
         """Admit new requests, then advance every in-flight prefill by
         one ``chunk_tokens`` window (one jitted step for the batch)."""
-        # admission: same lifetime reservation as the unchunked path
+        # admission: same cumulative lifetime check as the unchunked
+        # path; prompts reserve immediately, so only the not-yet-
+        # reserved growth of earlier admits carries into ``pending``
+        pending = 0
         for r in reqs[:len(self.free_slots())]:
             if not self.free_slots():
                 break
-            if not self.can_admit(r):
+            if not self.can_admit(r, pending):
                 continue
             slot = self.free_slots()[0]
             sid = self._next_seq
             self._next_seq += 1
+            used_before = self.view.used
             ok = self.view.append_tokens(sid, len(r.prompt))
             assert ok
+            pending += self.lifetime_blocks(r) - (self.view.used
+                                                  - used_before)
             self.slots[slot] = r
             self.slot_seq[slot] = sid
             r._seq_id = sid
@@ -246,58 +293,159 @@ class Engine:
             done_tokens += int(clens[i])
             if self._prefilling[sl] >= len(r.prompt):
                 del self._prefilling[sl]
-                r.output.append(int(nxt[i]))       # first generated token
-                self.view.append_tokens(r._seq_id, 1)
+                # first generated token — same reserve-then-commit as
+                # the unchunked path (decode retries on overcommit)
+                if self.view.append_tokens(r._seq_id, 1):
+                    r.output.append(int(nxt[i]))
         return done_tokens
 
     # ------------------------------------------------------------------
-    def decode(self) -> int:
-        """One decode step over all active slots (prefilling slots are
-        excluded until their prompt completes).  Returns #tokens."""
+    def export_decode_job(self) -> Optional[DecodeJob]:
+        """Snapshot the tensors the fused multi-LLM tick needs from this
+        engine: active decode rows (prefilling slots are excluded until
+        their prompt completes) plus per-row sequence identity for
+        block-table resolution against the pool.  Returns None when the
+        engine has no decode work this tick."""
         act = [s for s in self.active_slots() if s not in self._prefilling]
         if not act:
-            return 0
-        B = len(act)
+            return None
         reqs = [self.slots[i] for i in act]
-        seq_ids = [r._seq_id for r in reqs]
         last = np.array([r.output[-1] if r.output else r.prompt[-1]
                          for r in reqs], np.int32)
-        lens = self.view.seq_lens(seq_ids)  # includes reserved current token
-        table = self.view.block_table(seq_ids, self.max_blocks)
-        sl = jnp.asarray(np.array(act))
+        return DecodeJob(slots=act, reqs=reqs,
+                         seq_ids=[r._seq_id for r in reqs], last_tok=last)
 
-        ssm_state = self.ssm_state[:, sl] if self.cfg.ssm else None
-        conv_tail = self.conv_tail[:, sl] if self.cfg.ssm else None
-        pool_k, pool_v, logits, new_ssm, new_tail = self._decode_fn(
-            self.params, jnp.asarray(last), jnp.asarray(lens),
-            self.pool.k, self.pool.v, jnp.asarray(table),
-            ssm_state, conv_tail)
-        self.pool.k, self.pool.v = pool_k, pool_v
-        if self.cfg.ssm:
-            self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm)
-            self.conv_tail = self.conv_tail.at[:, sl].set(new_tail)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+    def apply_decode_result(self, job: DecodeJob, nxt: np.ndarray) -> int:
+        """Commit one decode step's sampled tokens back into engine and
+        pool bookkeeping (shared by the serial and fused paths).
+
+        Rows that cannot reserve their next-token block are rolled back
+        (indices recorded in ``self._rolled_rows`` for the caller to
+        revert any non-idempotent per-step state, e.g. SSM carries).
+        """
         done_tokens = 0
-        for i, r in enumerate(reqs):
+        self._rolled_rows = []
+        for i, r in enumerate(job.reqs):
             r.output.append(int(nxt[i]))
             done_tokens += 1
             if r.done:
-                import time as _time
-                r.finish = _time.perf_counter()
-                self.view.free_seq(seq_ids[i])
-                slot = act[i]
+                r.finish = time.perf_counter()
+                self.view.free_seq(job.seq_ids[i])
+                slot = job.slots[i]
                 self.slots[slot] = None
                 self.slot_seq[slot] = -1
                 self.finished.append(r)
             else:
-                self.view.append_tokens(seq_ids[i], 1)
+                ok = self.view.append_tokens(job.seq_ids[i], 1)
+                if not ok:
+                    # quota overcommit (admitted sequences' future
+                    # growth is not reserved, and adapt_quotas may
+                    # shrink the quota): a silent miss here would
+                    # desync lens/pos and corrupt the sequence's KV on
+                    # the next step.  Instead roll the token back and
+                    # retry next tick — lens is unchanged, so the
+                    # retry recomputes the same position (greedy ⇒ the
+                    # same token) once another sequence frees blocks.
+                    # The KV rewrite is idempotent; decode() reverts
+                    # SSM state for rolled-back rows.
+                    r.output.pop()
+                    done_tokens -= 1
+                    self._rolled_rows.append(i)
+        # stall escape: if EVERY row rolled back and nothing finished,
+        # no sequence can ever free blocks for the others — after two
+        # such ticks, preempt the youngest sequence (evict its cache,
+        # restart it from scratch via the scheduler queue; greedy ⇒ it
+        # regenerates the same tokens) so the rest can proceed.
+        rollbacks = len(self._rolled_rows)
+        if rollbacks and rollbacks == len(job.reqs):
+            self._stall_ticks += 1
+            if self._stall_ticks >= 2:
+                self._preempt_youngest()
+                self._stall_ticks = 0
+        else:
+            self._stall_ticks = 0
         return done_tokens
+
+    def _preempt_youngest(self) -> None:
+        """Evict the most recently admitted sequence: free its cache,
+        reset its progress, and hand the request back via
+        ``self.preempted`` (the scheduler re-queues it; direct engine
+        users resubmit through ``prefill``).  Restart-from-scratch is
+        exact for every family — a fresh prefill rebuilds KV and SSM
+        state alike."""
+        act = [s for s in self.active_slots() if s not in self._prefilling]
+        if not act:
+            return
+        slot = max(act, key=lambda s: self.slot_seq[s])
+        r = self.slots[slot]
+        self.view.free_seq(int(self.slot_seq[slot]))
+        self.slots[slot] = None
+        self.slot_seq[slot] = -1
+        r.output.clear()
+        r.prefill_done = -1.0
+        self.preempted.append(r)
+
+    def decode(self, job: Optional[DecodeJob] = None) -> int:
+        """One decode step over all active slots.  Returns #tokens."""
+        job = job or self.export_decode_job()
+        if job is None:
+            return 0
+        lens = self.view.seq_lens(job.seq_ids)  # incl. reserved current token
+        table = self.view.block_table(job.seq_ids, self.max_blocks)
+        sl = jnp.asarray(np.array(job.slots))
+
+        ssm_state = self.ssm_state[:, sl] if self.cfg.ssm else None
+        conv_tail = self.conv_tail[:, sl] if self.cfg.ssm else None
+        pool_k, pool_v, logits, new_ssm, new_tail = self._decode_fn(
+            self.params, jnp.asarray(job.last_tok), jnp.asarray(lens),
+            self.pool.k, self.pool.v, jnp.asarray(table),
+            ssm_state, conv_tail)
+        self.pool.k, self.pool.v = pool_k, pool_v
+        if self.cfg.ssm:
+            prev_ssm, prev_tail = self.ssm_state, self.conv_tail
+            self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm)
+            self.conv_tail = self.conv_tail.at[:, sl].set(new_tail)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        toks = self.apply_decode_result(job, nxt)
+        if self.cfg.ssm and self._rolled_rows:
+            # rolled-back rows must retry from the PRE-step state: the
+            # SSM carry is not idempotent (re-advancing it on retry
+            # would silently change the eventually-committed token)
+            rs = jnp.asarray(np.array([job.slots[i]
+                                       for i in self._rolled_rows]))
+            self.ssm_state = self.ssm_state.at[:, rs].set(prev_ssm[:, rs])
+            self.conv_tail = self.conv_tail.at[:, rs].set(prev_tail[:, rs])
+        return toks
 
     def has_decode_work(self) -> bool:
         return any(s not in self._prefilling for s in self.active_slots())
 
     def has_prefill_work(self) -> bool:
         return bool(self._prefilling)
+
+    # ------------------------------------------------------------------
+    def fusion_signature(self) -> Optional[tuple]:
+        """Key under which this engine's decode step can be fused with
+        other colocated engines (DESIGN.md §2): engines whose signature
+        matches share one stacked-weights jitted step.  ``None`` marks
+        the engine fusion-ineligible (SSM/hybrid keep their own scan;
+        MoE keeps its own routed FFN) — the scheduler falls back to the
+        serial per-engine tick for those.
+
+        The signature pins everything that shapes the stacked param
+        tree and the fused computation: layer geometry, head layout,
+        projection extras, vocab padding, param dtype and the device
+        block-table width.
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm", "audio") or cfg.ssm \
+                or cfg.moe:
+            return None
+        return (cfg.family, cfg.n_layers, cfg.d_model, cfg.n_heads,
+                cfg.n_kv_heads, cfg.hd, cfg.d_ff, cfg.vocab_size,
+                cfg.qkv_bias, cfg.qk_norm, cfg.rope_theta, cfg.rms_eps,
+                cfg.tie_embeddings, cfg.frontend_dim, cfg.n_prefix_tokens,
+                str(self.params["tok"]["embed"].dtype), self.max_blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -482,3 +630,61 @@ def _decode_impl(params, last_tok, lens, pool_k, pool_v, table,
 
     logits = lm_logits(x, params["tok"], cfg)[..., :cfg.vocab_size]
     return pool_k, pool_v, logits, new_ssm, new_tail
+
+
+def _fused_decode_impl(params, toks, lens, pool_k, pool_v, tables, *,
+                       cfg: ModelConfig):
+    """Fused multi-LLM decode step (DESIGN.md §2).
+
+    One jitted sweep advances every colocated same-architecture engine
+    by one token: model-private matmuls run as batched contractions over
+    the stacked weight axis M, while KV writes and paged attention
+    flatten all M×R rows into a single pool operation — the per-row
+    block tables already resolve each row to its own model's physical
+    head-blocks, so the shared arena needs no per-model dispatch.
+
+    params: engine param trees stacked on a leading [M] axis
+    toks: [M, R] int32 last tokens (padded rows are masked by the
+        caller; their table entries are −1 so their KV writes drop)
+    lens: [M, R] lengths incl. the current token (1 on padded rows)
+    tables: [M, R, W] int32 group bases (−1 padded)
+    Returns (pool_k, pool_v, logits [M, R, vocab]).
+    """
+    M, R = toks.shape
+    W = tables.shape[2]
+    lp = params["layers"]
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    x = jax.vmap(lambda e, t: e[t])(params["tok"]["embed"], toks)  # [M,R,d]
+    pos = (lens - 1).astype(jnp.int32)                             # [M,R]
+    flat_table = tables.reshape(M * R, W)
+    flat_pos = pos.reshape(M * R)
+    flat_lens = lens.reshape(M * R)
+
+    # per-layer semantics (projections, bias, qk_norm, rope, SwiGLU,
+    # final logits) come from the SAME helpers the serial path uses,
+    # vmapped over the stacked model axis — the fused path cannot
+    # drift from models/layers.py
+    for li in range(cfg.n_layers):
+        def qkv_m(xm, lpm, posm, li=li):
+            h = rms_norm(xm, lpm["ln1"][li], cfg.rms_eps)
+            q, k, v = attn_qkv(h[:, None, :], lpm, li, cfg, posm[:, None])
+            return q[:, 0], k[:, 0], v[:, 0]                  # [R,{H,KV},hd]
+
+        def post_m(xm, om, lpm, li=li):
+            xm = xm + om.reshape(om.shape[0], -1) @ lpm["wo"][li]
+            h = rms_norm(xm, lpm["ln2"][li], cfg.rms_eps)
+            return xm + mlp(h, lpm, li)
+
+        q, k, v = jax.vmap(qkv_m)(x, lp, pos)
+        pool_k, pool_v = cache_ops.write_tokens(
+            pool_k, pool_v, k.reshape(M * R, 1, n_kv, hd),
+            v.reshape(M * R, 1, n_kv, hd), flat_table, flat_pos, li, n_kv)
+        phys = cache_ops.resolve_physical_blocks(flat_table, li, n_kv)
+        o = cache_ops.fused_paged_decode_attention(
+            q.reshape(M * R, n_h, hd), pool_k, pool_v, phys, flat_lens)
+        x = jax.vmap(post_m)(x, o.reshape(M, R, n_h, hd), lp)
+
+    logits = jax.vmap(lambda xm, tokm: lm_logits(xm, tokm, cfg))(
+        x, params["tok"])
+    return pool_k, pool_v, logits[..., :cfg.vocab_size]

@@ -27,7 +27,6 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -193,6 +192,30 @@ class ModelCacheView:
         return np.array([self.seqs[s].n_tokens for s in seq_ids], np.int32)
 
 
+def fused_block_tables(views_seqs: List[Tuple["ModelCacheView", List[int]]],
+                       rows: int, max_blocks: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Combined block-table assembly for the fused multi-LLM decode tick
+    (DESIGN.md §2): each colocated model's per-sequence tables are
+    resolved by its own ``ModelCacheView`` against the shared arena,
+    then padded to a common ``rows × max_blocks`` shape so one jitted
+    step can consume every model's rows at once.
+
+    Returns ``(tables [M, rows, max_blocks] int32, lens [M, rows]
+    int32)``.  Padded table entries are −1 (KV writes drop, attention
+    masks); padded lens are 1 so the fused attention sweep reads a
+    single masked position instead of an empty range.
+    """
+    M = len(views_seqs)
+    tables = np.full((M, rows, max_blocks), -1, np.int32)
+    lens = np.ones((M, rows), np.int32)
+    for m, (view, seq_ids) in enumerate(views_seqs):
+        b = len(seq_ids)
+        tables[m, :b] = view.block_table(seq_ids, max_blocks)
+        lens[m, :b] = view.seq_lens(seq_ids)
+    return tables, lens
+
+
 class UnifiedKVPool:
     """The shared device arena + host allocator for one LLM unit."""
 
@@ -223,6 +246,32 @@ class UnifiedKVPool:
         self.views[cfg.name] = v
         self.used_by[cfg.name] = 0
         return v
+
+    def grant_min_quota(self, view: "ModelCacheView", need: int) -> bool:
+        """Raise ``view``'s quota to at least ``need`` head-blocks by
+        pulling spare quota (quota − used) from the other views,
+        most-spare first.  Escape hatch for the scheduler when a
+        queued request's lifetime no longer fits a quota that
+        ``adapt_quotas`` shrank — without it the request would be
+        re-queued forever.  Returns True if the target was reached.
+        """
+        if view.quota >= need:
+            return True
+        donors = sorted((v for v in self.views.values() if v is not view),
+                        key=lambda v: v.quota - v.used, reverse=True)
+        for d in donors:
+            # leave one block-group of growth headroom per active
+            # sequence so draining the donor doesn't immediately stall
+            # its in-flight decodes into rollback/preemption
+            margin = len(d.seqs) * d.group_size
+            spare = max(0, d.quota - d.used - margin)
+            take = min(spare, need - view.quota)
+            if take > 0:
+                d.quota -= take
+                view.quota += take
+            if view.quota >= need:
+                return True
+        return view.quota >= need
 
     # ---- ADBS quota adaptation (paper Alg. 3, last line) ---------------
     def adapt_quotas(self, min_quota: int = 64) -> None:

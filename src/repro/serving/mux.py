@@ -10,8 +10,15 @@ sharing one ``UnifiedKVPool``:
 
 On TPU the "fill remaining SMs" of the paper becomes fusing the decode
 batches of all colocated LLMs into the same scheduler tick (DESIGN.md
-§2); on this CPU runtime a tick executes the selected jobs back-to-back
-and the wall-clock benefit shows up as higher aggregate tokens/s than
+§2).  With ``fused=True`` this runtime executes that fusion for real:
+same-architecture engines' weights are stacked once (cached per group)
+and every tick runs ONE jitted batched step — cross-model rows share a
+single paged-attention + MLP sweep over the unified pool — instead of
+N sequential ``Engine.decode`` dispatches.  Heterogeneous leftovers
+(SSM engines keep their own scan, MoE its routed FFN, singleton
+architectures) fall back to the serial per-engine path in the same
+tick.  With ``fused=False`` every engine decodes back-to-back and the
+benefit of colocation shows up only as higher aggregate tokens/s than
 FCFS/temporal multiplexing (benchmarks/fig9).
 
 ``policy``: "adbs" (paper), "fcfs" (temporal multiplexing baseline),
@@ -22,10 +29,15 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from functools import partial
+from typing import Deque, Dict, List
 
-from repro.serving.engine import Engine, Request
-from repro.serving.kvcache import UnifiedKVPool
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine, Request, _fused_decode_impl
+from repro.serving.kvcache import UnifiedKVPool, fused_block_tables
 
 
 @dataclass
@@ -39,9 +51,71 @@ class MuxStats:
         return len(self.finished) / max(horizon, 1e-9)
 
 
+class FusedDecodeGroup:
+    """Colocated engines whose decode steps run as ONE jitted sweep.
+
+    Engines land in the same group when ``Engine.fusion_signature()``
+    matches (same layer/head geometry, vocab padding, param dtype and
+    block-table width).  Their weight trees are stacked once on a
+    leading model axis and cached here — per-tick work is only the
+    (small) host-side batch assembly, so the fused step amortizes both
+    dispatch overhead and kernel-launch count across the group.
+
+    Known cost: the stacked tree is a second copy of each member's
+    weights (engines keep their own for prefill and the lone-engine
+    fallback), so fused groups pay ~2× weight memory.  De-duplicating
+    (engines indexing one stacked buffer) is the planned fix once the
+    prefill path can consume stacked trees — see DESIGN.md §2.
+    """
+
+    def __init__(self, engines: List[Engine]):
+        assert len(engines) >= 2
+        sigs = {e.fusion_signature() for e in engines}
+        assert len(sigs) == 1 and None not in sigs, \
+            "fused group requires matching fusion signatures"
+        self.engines = engines
+        self.cfg = engines[0].cfg
+        self.max_blocks = engines[0].max_blocks
+        # fixed row count: padding every tick to max_slots keeps the
+        # jitted sweep at ONE compilation per group (a shrinking
+        # active-row count would otherwise re-trace the whole stacked
+        # forward for every distinct batch size)
+        self.rows = max(e.max_slots for e in engines)
+        self.params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[e.params for e in engines])
+        self._fn = jax.jit(partial(_fused_decode_impl, cfg=self.cfg),
+                           donate_argnums=(3, 4))
+
+    def decode(self, jobs) -> int:
+        """Run one fused decode step.  ``jobs`` is aligned with
+        ``self.engines`` (None where an engine has no decode work this
+        tick — its rows are padded and masked, since the stacked param
+        tree always carries every group member).  Returns #tokens."""
+        pool = self.engines[0].pool
+        rows = self.rows
+        toks = np.zeros((len(self.engines), rows), np.int32)
+        for m, job in enumerate(jobs):
+            if job is not None:
+                toks[m, :len(job)] = job.last_tok
+        tables, lens = fused_block_tables(
+            [(eng.view, job.seq_ids if job is not None else [])
+             for eng, job in zip(self.engines, jobs)],
+            rows, self.max_blocks)
+        pool.k, pool.v, logits = self._fn(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            pool.k, pool.v, jnp.asarray(tables))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))        # [M, rows]
+        total = 0
+        for m, (eng, job) in enumerate(zip(self.engines, jobs)):
+            if job is not None:
+                total += eng.apply_decode_result(job, nxt[m, :len(job)])
+        return total
+
+
 class MuxScheduler:
     def __init__(self, engines: Dict[str, Engine], pool: UnifiedKVPool,
-                 policy: str = "adbs", adapt_every: int = 16):
+                 policy: str = "adbs", adapt_every: int = 16,
+                 fused: bool = False):
         self.engines = engines
         self.pool = pool
         self.policy = policy
@@ -53,6 +127,27 @@ class MuxScheduler:
         self._decode_rr = 0
         self.stats = MuxStats()
         self.clock = 0.0  # logical time (ticks); callers may use wall time
+        # fused multi-LLM decode tick (DESIGN.md §2): group colocated
+        # engines by fusion signature; stacked weights are cached per
+        # group for the lifetime of the scheduler.  fcfs (the temporal
+        # baseline) never reaches the fused tick — don't pay the
+        # stacked-weight copy for it.
+        self.fused = fused and policy != "fcfs"
+        self.fused_groups: List[FusedDecodeGroup] = []
+        self._serial_names = list(engines)
+        if self.fused:
+            by_sig: Dict[tuple, List[str]] = {}
+            for name, eng in engines.items():
+                sig = eng.fusion_signature()
+                if sig is not None:
+                    by_sig.setdefault(sig, []).append(name)
+            grouped = set()
+            for names in by_sig.values():
+                if len(names) >= 2:
+                    self.fused_groups.append(
+                        FusedDecodeGroup([engines[n] for n in names]))
+                    grouped.update(names)
+            self._serial_names = [n for n in engines if n not in grouped]
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -70,9 +165,17 @@ class MuxScheduler:
             name = self._names[(self._prefill_rr + i) % n]
             q = self.queues[name]
             eng = self.engines[name]
+            if q and eng.lifetime_blocks(q[0]) > eng.view.quota:
+                # adapt_quotas shrank this LLM's quota below the head
+                # request's whole lifetime — it would re-queue forever;
+                # pull spare quota back before trying to admit
+                self.pool.grant_min_quota(eng.view,
+                                          eng.lifetime_blocks(q[0]))
             batch = []
+            pending = 0   # lifetime blocks of already-selected requests
             while q and len(batch) < len(eng.free_slots()):
-                if eng.can_admit(q[0]):
+                if eng.can_admit(q[0], pending):
+                    pending += eng.lifetime_blocks(q[0])
                     batch.append(q.popleft())
                 else:
                     break
@@ -97,28 +200,63 @@ class MuxScheduler:
         self._decode_rr = (self._decode_rr + 1) % n
         return total
 
+    def _run_decode_fused(self) -> int:
+        """Fused multi-LLM decode tick: one jitted sweep per fused
+        group, serial fallback for heterogeneous leftovers."""
+        total = 0
+        for grp in self.fused_groups:
+            jobs = [eng.export_decode_job() for eng in grp.engines]
+            n_active = sum(j is not None for j in jobs)
+            if n_active == 0:
+                continue
+            if n_active == 1:
+                # a lone active engine gains nothing from the fused
+                # sweep — run its (already exported) job serially
+                m = next(i for i, j in enumerate(jobs) if j is not None)
+                total += grp.engines[m].decode(jobs[m])
+            else:
+                total += grp.decode(jobs)
+        n = len(self._serial_names)
+        for i in range(n):
+            name = self._serial_names[(self._decode_rr + i) % n]
+            eng = self.engines[name]
+            if eng.has_decode_work():
+                total += eng.decode()
+        self._decode_rr = (self._decode_rr + 1) % max(n, 1)
+        return total
+
+    def _decode_tick(self) -> int:
+        return self._run_decode_fused() if self.fused \
+            else self._run_decode_round_robin()
+
     def _harvest(self) -> None:
-        for eng in self.engines.values():
+        for name, eng in self.engines.items():
             if eng.finished:
                 self.stats.finished.extend(eng.finished)
                 eng.finished.clear()
+            if eng.preempted:
+                # stall-escape evictions go back to the head of their
+                # queue and restart from scratch on the next prefill
+                for r in reversed(eng.preempted):
+                    self.queues[name].appendleft(r)
+                eng.preempted.clear()
 
     # ------------------------------------------------------------------
     def tick(self) -> None:
         """One scheduler iteration (paper Alg. 3 main loop)."""
         self.stats.ticks += 1
         if self.policy == "adbs":
-            ran_prefill = self._run_prefill_round_robin()
-            # decode jobs fill the remaining resources (always in this
-            # runtime: jobs serialize on CPU, colocate on TPU)
-            self.stats.decode_tokens += self._run_decode_round_robin()
+            self._run_prefill_round_robin()
+            # decode jobs fill the remaining resources: one fused
+            # multi-LLM sweep when fused=True, back-to-back otherwise
+            self.stats.decode_tokens += self._decode_tick()
             if self.stats.ticks % self.adapt_every == 0:
                 self.pool.adapt_quotas()
         elif self.policy == "round_robin":
             # no prefill priority, no quota adaptation
             if self.stats.ticks % 2 == 0:
                 self._run_prefill_round_robin()
-            self.stats.decode_tokens += self._run_decode_round_robin()
+            self.stats.decode_tokens += self._decode_tick()
         elif self.policy == "fcfs":
             # temporal multiplexing: serve the LLM with the oldest
             # pending request, prefill+decode to completion batch-wise
@@ -131,9 +269,11 @@ class MuxScheduler:
             if oldest_name is not None and not active:
                 eng = self.engines[oldest_name]
                 batch = []
+                pending = 0
                 q = self.queues[oldest_name]
                 while q and len(batch) < len(eng.free_slots()) \
-                        and eng.can_admit(q[0]):
+                        and eng.can_admit(q[0], pending):
+                    pending += eng.lifetime_blocks(q[0])
                     batch.append(q.popleft())
                 if batch:
                     self.stats.prefill_tokens += eng.prefill(batch)

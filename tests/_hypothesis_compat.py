@@ -1,0 +1,31 @@
+"""Hypothesis pass-through with graceful degradation.
+
+CI installs the real hypothesis via pyproject's ``[test]`` extra.  In
+environments without it, property tests decorated with ``@given`` are
+skipped *individually* — the plain unit tests in the same module still
+collect and run (a bare ``from hypothesis import ...`` would fail the
+whole module at collection instead).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+    class _Strategies:
+        """Accepts any strategy expression at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install -e .[test])")

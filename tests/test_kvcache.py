@@ -1,7 +1,8 @@
 """Unified KV pool + block allocator: unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.config import BLOCK_TOKENS

