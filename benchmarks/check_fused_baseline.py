@@ -1,0 +1,103 @@
+"""CI perf-smoke gate for the fused multi-LLM tick (DESIGN.md §2).
+
+Compares the current ``fused_tick`` result against the committed
+baseline (``experiments/results/fused_tick_baseline.json``) and fails
+if the fused decode+prefill throughput advantage regressed by more
+than ``--tolerance`` (default 15%).
+
+Absolute tokens/s are machine-dependent, so the gate compares the
+fused/serial *aggregate speedup ratio* — both sides are measured in
+the same process on the same machine, which makes the ratio stable
+across runner generations while still catching a fusion-path
+regression (a broken sweep collapses the ratio toward 1×).  The ratio
+is only meaningful for the same workload, so the gate first checks
+that the workload knobs match the baseline and fails loudly on a
+mismatch.  It also re-checks the structural invariants the benchmark
+asserts: greedy parity, weight de-duplication, and zero jit traces
+after warm-up.
+
+The committed baseline is recorded in ``--quick`` mode — the mode CI
+runs.  After intentionally changing the benchmark workload, re-seed
+it:
+
+  PYTHONPATH=src python -m benchmarks.run --quick --only fused_tick
+  cp experiments/results/fused_tick.json \
+     experiments/results/fused_tick_baseline.json
+
+  PYTHONPATH=src python -m benchmarks.check_fused_baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import RESULTS_DIR
+
+BASELINE = "experiments/results/fused_tick_baseline.json"
+
+
+# the ratio is only comparable between runs of the SAME workload —
+# these knobs must match the baseline exactly or the gate is
+# calibrated against a different benchmark
+WORKLOAD_KEYS = ("n_models", "max_new", "n_per_model", "chunk_tokens",
+                 "prompt_lens")
+
+
+def check(current: dict, baseline: dict, tolerance: float) -> list:
+    failures = []
+    for key in WORKLOAD_KEYS:
+        if current.get(key) != baseline.get(key):
+            failures.append(
+                f"workload mismatch on {key!r}: current "
+                f"{current.get(key)} vs baseline {baseline.get(key)} — "
+                f"re-seed the baseline JSON for the new workload")
+    if failures:
+        return failures
+    if not current.get("parity"):
+        failures.append("fused/serial token parity broken")
+    if not current.get("weight_dedup_ok"):
+        failures.append("fused weight bytes exceed serial (copy leaked)")
+    for mode, m in current.get("modes", {}).items():
+        if m.get("jit_traces_measured", 0) != 0:
+            failures.append(
+                f"{mode}: {m['jit_traces_measured']} jit traces after "
+                f"warm-up (shape-stability regression)")
+    cur = current.get("speedup_aggregate", 0.0)
+    base = baseline.get("speedup_aggregate", 0.0)
+    floor = base * (1.0 - tolerance)
+    if cur < floor:
+        failures.append(
+            f"speedup_aggregate regressed: {cur:.3f}× < {floor:.3f}× "
+            f"(baseline {base:.3f}× − {tolerance:.0%})")
+    else:
+        print(f"[check_fused_baseline] speedup_aggregate: {cur:.3f}× "
+              f"(baseline {base:.3f}×, floor {floor:.3f}×) OK")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--result", default=os.path.join(RESULTS_DIR,
+                                                     "fused_tick.json"))
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    args = ap.parse_args()
+
+    with open(args.result) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(current, baseline, args.tolerance)
+    if failures:
+        for msg in failures:
+            print(f"[check_fused_baseline] FAIL: {msg}")
+        return 1
+    print("[check_fused_baseline] fused tick within baseline envelope")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -123,3 +123,129 @@ def flash_prefill(q, k, v, *, block_q: int = 256, block_k: int = 512,
         interpret=interpret,
     )(qt, kt, vt)
     return out.transpose(0, 2, 1, 3)   # [B,S,H,hd]
+
+
+# ---------------------------------------------------------------------------
+# fused paged flash prefill — the prefill-phase mirror of
+# kernels/paged_attention.fused_paged_decode_attention (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+def _paged_prefill_kernel(phys_ref, offs_ref,            # scalar prefetch
+                          q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *,
+                          bt: int, n_blocks: int, scale: float,
+                          rows: int, group: int, chunk: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    off = offs_ref[b]
+    # blocks entirely above the last query position are fully masked
+    run = j * bt <= off + chunk - 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [rows, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [bt, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # row r = c*group + g queries absolute position off + c; the
+        # causal mask admits every pool position ≤ that (earlier
+        # chunks + this chunk's already-written KV), matching the XLA
+        # oracle (cache_ops.fused_paged_chunk_attention)
+        t_pos = j * bt + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, bt), 1)
+        q_pos = off + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, bt), 0) // group
+        s = jnp.where(t_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_paged_flash_prefill(q, pool_k, pool_v, phys, q_offset, *,
+                              interpret: bool = False):
+    """Multi-sequence chunked-prefill attention over pre-resolved
+    physical head-blocks.
+
+    The fused multi-LLM prefill sweep (DESIGN.md §2) flattens every
+    in-flight prompt chunk of every colocated same-architecture engine
+    into one batch; ``phys`` rows already carry the (model, layer) →
+    physical-id resolution, so one kernel sweep serves all colocated
+    LLMs' prefill chunks at once — mirroring
+    ``fused_paged_decode_attention`` with C query tokens per row and a
+    causal chunk mask.  Scalar-prefetched block ids stream the right
+    ``[BLOCK_TOKENS, head_dim]`` tile HBM→VMEM ahead of compute; the
+    chunk's query block ([C·group, hd]) stays resident in VMEM.
+
+    q: [B, C, H, hd] (post-RoPE, absolute positions q_offset+i; rows
+        may belong to different models)
+    pool_k/v: [N, BT, hd] head-block arena
+    phys: [B, n_kv, max_blocks] int32 physical head-block ids (invalid
+        entries must point at a valid block — e.g. 0 — and be masked
+        via the causal positions)
+    q_offset: [B] int32 absolute position of each row's first query
+    Returns [B, C, H, hd].
+    """
+    B, C, H, hd = q.shape
+    N, BT, _ = pool_k.shape
+    n_kv, max_blocks = phys.shape[1], phys.shape[2]
+    group = H // n_kv
+    rows = C * group
+    scale = 1.0 / math.sqrt(hd)
+
+    qt = (q.reshape(B, C, n_kv, group, hd)
+           .transpose(0, 2, 1, 3, 4)
+           .reshape(B, n_kv, rows, hd))
+    kernel = functools.partial(_paged_prefill_kernel, bt=BT,
+                               n_blocks=max_blocks, scale=scale,
+                               rows=rows, group=group, chunk=C)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_kv, max_blocks),
+            in_specs=[
+                pl.BlockSpec((1, 1, rows, hd),
+                             lambda b, h, j, *refs: (b, h, 0, 0)),
+                pl.BlockSpec((1, BT, hd),
+                             lambda b, h, j, phys_ref, offs_ref:
+                                 (phys_ref[b, h, j], 0, 0)),
+                pl.BlockSpec((1, BT, hd),
+                             lambda b, h, j, phys_ref, offs_ref:
+                                 (phys_ref[b, h, j], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rows, hd),
+                                   lambda b, h, j, *refs: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, n_kv, rows, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(phys, q_offset, qt, pool_k, pool_v)
+    return (out.reshape(B, n_kv, C, group, hd)
+               .transpose(0, 2, 1, 3, 4)
+               .reshape(B, C, H, hd))

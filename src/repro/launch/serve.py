@@ -3,10 +3,13 @@
 Colocates the requested architectures' REDUCED variants on one unified
 KV pool and serves a synthetic Poisson workload with the chosen
 scheduling policy — the end-to-end MuxServe pipeline at laptop scale.
-``--fused`` runs the fused multi-LLM decode tick (DESIGN.md §2): one
-jitted sweep per tick for same-architecture engines instead of
-back-to-back per-engine steps.  Repeating an arch (e.g.
-``--archs qwen2-7b,qwen2-7b``) colocates independent instances.
+``--fused`` runs the fused multi-LLM tick (DESIGN.md §2): one jitted
+decode sweep per tick for same-architecture engines (and, with
+``--chunk-tokens``, one fused prefill sweep for their in-flight prompt
+chunks) off a single zero-copy stacked weight tree per group — the
+HBM reclaimed by the de-duplication is granted to the pool as extra
+head-blocks.  Repeating an arch (e.g. ``--archs qwen2-7b,qwen2-7b``)
+colocates independent instances.
 
   PYTHONPATH=src python -m repro.launch.serve \
       --archs qwen2-7b,mamba2-2.7b --policy adbs --rate 2.0 \
@@ -25,7 +28,8 @@ import numpy as np
 from repro import configs
 from repro.config import replace
 from repro.models.transformer import init_params
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import (TRACE_COUNTS, Engine, Request,
+                                  unique_tree_bytes)
 from repro.serving.kvcache import UnifiedKVPool
 from repro.serving.mux import MuxScheduler
 
@@ -100,7 +104,14 @@ def main() -> int:
     if args.fused:
         for g in mux.fused_groups:
             print(f"[serve] fused group ({len(g.engines)} engines): "
-                  f"{[e.cfg.name for e in g.engines]}")
+                  f"{[e.cfg.name for e in g.engines]}, "
+                  f"{'fused' if g.chunk_tokens else 'serial'} prefill, "
+                  f"{g.weight_bytes() / 1e6:.1f} MB shared weights "
+                  f"(zero-copy)")
+        if mux.reclaimed_weight_bytes:
+            print(f"[serve] weight de-dup reclaimed "
+                  f"{mux.reclaimed_weight_bytes / 1e6:.1f} MB → pool grew "
+                  f"to {pool.n_head_blocks} head-blocks")
 
     t0 = time.perf_counter()
     idx = 0
@@ -128,6 +139,12 @@ def main() -> int:
           f"{pool.allocator.fragmentation():.3f}")
     for name, view in pool.views.items():
         print(f"[serve]   {name}: quota={view.quota} used={view.used}")
+    print(f"[serve] HBM: "
+          f"{unique_tree_bytes([e.params for e in engines.values()]) / 1e6:.1f}"
+          f" MB weights (de-duplicated), {pool.hbm_bytes() / 1e6:.0f} MB "
+          f"pool arena")
+    print(f"[serve] jit traces by step: {dict(TRACE_COUNTS)} "
+          f"(bounded by the shape buckets — DESIGN.md §5)")
     return 0
 
 

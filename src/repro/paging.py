@@ -15,14 +15,17 @@ import jax.numpy as jnp
 def resolve_physical_blocks(table, layer, n_kv):
     """Resolve a group-base block table to physical head-block ids.
 
-    table: [B, max_blocks] int32 group bases (−1 padded)
-    Returns [B, n_kv, max_blocks] int32 physical ids (invalid → 0; the
-    caller masks those positions via seq_lens).  Rows of a *fused*
-    multi-LLM batch can come from different models as long as their
-    (layer, n_kv) resolution has already been applied here — this is
-    the per-row handoff point between the pool and the fused kernel.
+    table: [..., max_blocks] int32 group bases (−1 padded) — any number
+    of leading batch dims (the fused multi-LLM sweeps pass their row
+    batches flattened or as [M, rows]).
+    Returns [..., n_kv, max_blocks] int32 physical ids (invalid → 0;
+    the caller masks those positions via seq_lens / query positions).
+    Rows of a *fused* multi-LLM batch can come from different models as
+    long as their (layer, n_kv) resolution has already been applied
+    here — this is the per-row handoff point between the pool and the
+    fused kernels (decode AND prefill).
     """
     layer = jnp.asarray(layer, jnp.int32)
-    phys = (jnp.maximum(table, 0)[:, None, :] + layer * n_kv
-            + jnp.arange(n_kv, dtype=jnp.int32)[None, :, None])
-    return jnp.where(table[:, None, :] >= 0, phys, 0).astype(jnp.int32)
+    heads = jnp.arange(n_kv, dtype=jnp.int32)[:, None]       # [n_kv, 1]
+    phys = jnp.maximum(table, 0)[..., None, :] + layer * n_kv + heads
+    return jnp.where(table[..., None, :] >= 0, phys, 0).astype(jnp.int32)

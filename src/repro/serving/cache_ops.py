@@ -18,8 +18,8 @@ from repro.paging import resolve_physical_blocks
 
 __all__ = ["write_tokens", "resolve_physical_blocks",
            "fused_paged_decode_attention", "paged_decode_attention",
-           "paged_chunk_attention", "windowed_decode_attention",
-           "write_window"]
+           "fused_paged_chunk_attention", "paged_chunk_attention",
+           "windowed_decode_attention", "write_window"]
 
 
 def write_tokens(pool_k, pool_v, k_new, v_new, table, start_pos, layer, n_kv):
@@ -96,22 +96,28 @@ def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
     return fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens)
 
 
-def paged_chunk_attention(q, pool_k, pool_v, table, q_offset, layer, n_kv):
-    """Chunked-prefill attention: a chunk of C query tokens per sequence
-    attends causally against the pool (earlier chunks + this chunk's
-    already-written KV).
+def fused_paged_chunk_attention(q, pool_k, pool_v, phys, q_offset):
+    """Multi-sequence chunk attention over pre-resolved physical blocks.
 
-    q: [B, C, H, hd] (post-RoPE, absolute positions q_offset+i)
-    pool_k/v: [N, BT, hd]; table: [B, max_blocks]; q_offset: [B]
+    Prefill-phase mirror of ``fused_paged_decode_attention``: the fused
+    multi-LLM prefill sweep (DESIGN.md §2) flattens every in-flight
+    prompt chunk of every colocated same-architecture engine into one
+    batch; each row's ``phys`` entries already encode (model, layer) →
+    physical id, so the chunk attention itself is model-agnostic.
+
+    q: [B, C, H, hd] (post-RoPE, absolute positions q_offset+i; rows
+        may belong to different models)
+    pool_k/v: [N, BT, hd]
+    phys: [B, n_kv, max_blocks] int32 physical head-block ids
+    q_offset: [B] int32 absolute position of each row's first query
     Returns [B, C, H, hd].
     """
     B, C, H, hd = q.shape
     BT = pool_k.shape[1]
-    max_blocks = table.shape[1]
+    n_kv, max_blocks = phys.shape[1], phys.shape[2]
     group = H // n_kv
     scale = 1.0 / math.sqrt(hd)
 
-    phys = resolve_physical_blocks(table, layer, n_kv)       # [B,KV,nb]
     k = pool_k[phys].reshape(B, n_kv, max_blocks * BT, hd)
     v = pool_v[phys].reshape(B, n_kv, max_blocks * BT, hd)
 
@@ -125,6 +131,21 @@ def paged_chunk_attention(q, pool_k, pool_v, table, q_offset, layer, n_kv):
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgct,bktd->bckgd", probs, v)
     return out.reshape(B, C, H, hd)
+
+
+def paged_chunk_attention(q, pool_k, pool_v, table, q_offset, layer, n_kv):
+    """Chunked-prefill attention: a chunk of C query tokens per sequence
+    attends causally against the pool (earlier chunks + this chunk's
+    already-written KV).  Single-model view: resolves the group-base
+    table, then delegates to the fused multi-sequence path so the
+    serial and fused prefill sweeps share one set of semantics.
+
+    q: [B, C, H, hd] (post-RoPE, absolute positions q_offset+i)
+    pool_k/v: [N, BT, hd]; table: [B, max_blocks]; q_offset: [B]
+    Returns [B, C, H, hd].
+    """
+    phys = resolve_physical_blocks(table, layer, n_kv)       # [B,KV,nb]
+    return fused_paged_chunk_attention(q, pool_k, pool_v, phys, q_offset)
 
 
 def windowed_decode_attention(q, win_k, win_v, seq_lens, window):

@@ -3,10 +3,28 @@
 Mirrors MuxServe's runtime-engine design (§3.4): prefill and decode are
 *separate jobs* operating on shared weights and the unified KV pool.
 The global ADBS scheduler (serving/mux.py) decides which job runs each
-tick; the analogue of MPS SM-assignment is the fused multi-LLM decode
-step (DESIGN.md §2) — ``export_decode_job`` / ``apply_decode_result``
-are this engine's half of that contract, ``_fused_decode_impl`` the
-stacked-weights sweep itself.
+tick; the analogue of MPS SM-assignment is the fused multi-LLM step
+(DESIGN.md §2) — ``export_decode_job`` / ``apply_decode_result`` and
+``export_prefill_job`` / ``apply_prefill_result`` are this engine's
+half of that contract, ``_fused_decode_impl`` /
+``_fused_prefill_chunk_impl`` the stacked-weights sweeps themselves.
+
+Zero-copy stacked weights (DESIGN.md §2): every jitted step takes a
+param tree stacked on a leading model axis ``M`` plus a model index —
+a singleton engine carries an ``M=1`` stack of its own weights, and an
+engine adopted into a fused group (``adopt_stacked``) points at the
+group's shared tree instead of keeping a private copy.  The per-model
+slice happens *inside* the jitted program (a dynamic index on the
+leading axis), so one compiled program serves every group member and
+no second weight copy ever lives in HBM.
+
+Shape stability: every hot-path batch is padded to a bucketed shape —
+powers-of-2 batch rows (masked via −1 block tables / zero lengths) and
+block-multiple prompt lengths — so steady-state serving compiles a
+bounded set of programs instead of re-tracing per tick.  The
+``TRACE_COUNTS`` hook counts impl traces (each jit compilation traces
+the impl exactly once) and is asserted bounded in tests and reported
+by ``benchmarks/fused_tick``.
 
 The engine manages a fixed number of decode *slots* (continuous
 batching): a sequence occupies a slot from prefill completion until
@@ -16,15 +34,16 @@ finish, and its attention KV lives in the unified pool while SSM state
 from __future__ import annotations
 
 import time
+from collections import Counter
 from dataclasses import dataclass, field
-from functools import partial
+from functools import lru_cache, partial
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import BLOCK_TOKENS, ModelConfig
+from repro.config import BLOCK_TOKENS, ModelConfig, replace
 from repro.models import mamba2 as M2
 from repro.models import moe as MoE
 from repro.models.layers import (attn_qkv, causal_attention, lm_logits,
@@ -54,6 +73,81 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _next_pow2(x: int) -> int:
+    """Smallest power of two ≥ x (bucketed batch rows — DESIGN.md §5)."""
+    return 1 << max(0, (x - 1).bit_length())
+
+
+def _pad_rows(rows: int, *specs):
+    """Pad each ``(array, fill)`` to ``rows`` leading rows.
+
+    One place defines the padded-row invariants of every bucketed
+    batch: −1 block tables (KV writes drop, attention resolves to a
+    masked block), 0 tokens/lengths (dead logits, sliced off
+    host-side) and length-1 decode rows (one masked garbage softmax).
+    """
+    out = []
+    for arr, fill in specs:
+        p = np.full((rows,) + arr.shape[1:], fill, arr.dtype)
+        p[:arr.shape[0]] = arr
+        out.append(p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# weight-tree accounting (zero-copy stacked weights, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+def tree_bytes(tree) -> int:
+    """Total bytes of every leaf in a param tree."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def unique_tree_bytes(trees) -> int:
+    """Bytes of the *distinct* buffers across several param trees.
+
+    Engines of a fused group share one stacked tree, so their leaves
+    are the same objects — counting each buffer once is the live-memory
+    accounting that proves the group pays ~1× (not 2×) weight memory.
+    """
+    seen: set = set()
+    total = 0
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if id(leaf) not in seen:
+                seen.add(id(leaf))
+                total += leaf.nbytes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# trace counting (shape-stability instrumentation)
+# ---------------------------------------------------------------------------
+# Each entry counts how many times jit TRACED the named step impl —
+# i.e. how many distinct programs were compiled for it.  A shape-stable
+# runtime stops growing these after warm-up (asserted in
+# tests/test_zero_copy.py, reported by benchmarks/fused_tick).
+TRACE_COUNTS: Counter = Counter()
+
+
+def _note_trace(name: str) -> None:
+    TRACE_COUNTS[name] += 1
+
+
+def total_traces() -> int:
+    return sum(TRACE_COUNTS.values())
+
+
+def _select_model(params, midx):
+    """Slice one model's tree out of a stacked ``[M, ...]`` tree.
+
+    ``midx`` is a *traced* scalar, so the slice is a dynamic index
+    inside the compiled program: every member of a fused group (and
+    the M=1 singleton case) shares ONE compilation per shape bucket,
+    and no per-model weight copy persists outside the step.
+    """
+    return jax.tree_util.tree_map(lambda a: a[midx], params)
+
+
 @dataclass
 class DecodeJob:
     """One engine's decode rows for the current tick, in export form.
@@ -74,6 +168,27 @@ class DecodeJob:
         return len(self.reqs)
 
 
+@dataclass
+class PrefillJob:
+    """One engine's in-flight prompt chunks for the current tick.
+
+    Mirror of ``DecodeJob`` for the chunked-prefill phase: the fused
+    multi-LLM prefill sweep pads the jobs of all group members to the
+    group's fixed row count and advances them in ONE jitted step; the
+    serial path pads to a power-of-2 row bucket instead.  Arrays are
+    exported *unpadded* — the runner owns the padding policy.
+    """
+    slots: List[int]
+    reqs: List[Request]
+    seq_ids: List[int]
+    toks: np.ndarray              # [B, C] int32 chunk tokens
+    offs: np.ndarray              # [B] int32 absolute chunk start
+    clens: np.ndarray             # [B] int32 true chunk lengths
+
+    def __len__(self) -> int:
+        return len(self.reqs)
+
+
 class Engine:
     """Inference engine for one LLM over the shared pool (CPU/XLA path)."""
 
@@ -88,7 +203,9 @@ class Engine:
         Attention families only (SSM state chunking is a natural
         extension — the mixer already carries state)."""
         self.cfg = cfg
-        self.params = params
+        # jit programs are cached per *geometry*, not per model name —
+        # colocated instances of the same architecture share programs
+        self.cfg_key = replace(cfg, name="")
         self.view = view
         self.pool = view.pool
         self.max_slots = max_slots
@@ -123,17 +240,31 @@ class Engine:
             self.ssm_state = None
             self.conv_tail = None
 
-        self._prefill_fn = jax.jit(partial(_prefill_impl, cfg=cfg),
-                                   donate_argnums=(3, 4))
-        self._decode_fn = jax.jit(partial(_decode_impl, cfg=cfg),
-                                  donate_argnums=(3, 4))
-        if cfg.family == "ssm":
-            self._chunk_fn = jax.jit(partial(_prefill_chunk_ssm_impl,
-                                             cfg=cfg),
-                                     donate_argnums=(3, 4))
-        else:
-            self._chunk_fn = jax.jit(partial(_prefill_chunk_impl, cfg=cfg),
-                                     donate_argnums=(4, 5))
+        # zero-copy weights: the engine holds an M=1 *stacked* tree and
+        # always runs the (stacked, model_index) step signature — when
+        # a FusedGroup adopts this engine (``adopt_stacked``) the tree
+        # is swapped for the group's shared stack and the private copy
+        # is freed, with no change to any step path.
+        self.params = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None],
+                                             params)
+        self.model_index = 0
+        self._prefill_fn = jitted_step("prefill", self.cfg_key)
+        self._decode_fn = jitted_step("decode", self.cfg_key)
+        self._chunk_fn = jitted_step(
+            "chunk_ssm" if cfg.family == "ssm" else "chunk", self.cfg_key)
+
+    # ------------------------------------------------------------------
+    def adopt_stacked(self, stacked, model_index: int) -> None:
+        """Point this engine at a fused group's shared stacked tree.
+
+        The private ``[1, ...]`` tree is dropped (freeing its buffers)
+        and every step — prefill, chunked prefill, decode, the
+        lone-engine fallback — runs off the group's buffers via the
+        leading-axis model index.  This is the zero-copy contract:
+        after adoption the group holds exactly ONE weight tree.
+        """
+        self.params = stacked
+        self.model_index = model_index
 
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -184,12 +315,18 @@ class Engine:
         if not admitted:
             return 0
         B = len(admitted)
+        # shape buckets (DESIGN.md §5): rows to the next power of two,
+        # prompt length to the next BLOCK_TOKENS multiple — the padded
+        # rows carry −1 tables (KV writes drop) and zero lengths, so
+        # steady state revisits a bounded set of compiled programs
+        Bp = _next_pow2(B)
         S = _round_up(max(len(r.prompt) for r in admitted), BLOCK_TOKENS)
         toks = np.zeros((B, S), np.int32)
-        lens = np.array([len(r.prompt) for r in admitted], np.int32)
+        lens = np.zeros((B,), np.int32)
         slot_ids = self.free_slots()[:B]
         seq_ids = []
         for i, r in enumerate(admitted):
+            lens[i] = len(r.prompt)
             toks[i, :lens[i]] = r.prompt
             sid = self._next_seq
             self._next_seq += 1
@@ -200,18 +337,20 @@ class Engine:
             self.slot_seq[slot_ids[i]] = sid
             r._seq_id = sid
 
-        table = self.view.block_table(seq_ids, self.max_blocks)
+        toks, lens, table = _pad_rows(
+            Bp, (toks, 0), (lens, 0),
+            (self.view.block_table(seq_ids, self.max_blocks), -1))
         pool_k, pool_v, logits, new_ssm, new_tail = self._prefill_fn(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            self.pool.k, self.pool.v, jnp.asarray(table))
+            self.params, self.model_index, jnp.asarray(toks),
+            jnp.asarray(lens), self.pool.k, self.pool.v, jnp.asarray(table))
         self.pool.k, self.pool.v = pool_k, pool_v
         if self.cfg.ssm:
             sl = jnp.asarray(slot_ids)
-            self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm)
+            self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm[:, :B])
             self.conv_tail = self.conv_tail.at[:, sl].set(
-                new_tail.astype(self.conv_tail.dtype))
+                new_tail[:, :B].astype(self.conv_tail.dtype))
         # sample first token
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(jnp.argmax(logits[:B], axis=-1))
         for i, r in enumerate(admitted):
             # reserve BEFORE committing the token: on quota overcommit
             # (admission point-checks headroom per request) the token
@@ -222,9 +361,11 @@ class Engine:
         return int(lens.sum())
 
     # ------------------------------------------------------------------
-    def _prefill_chunked(self, reqs: List[Request]) -> int:
-        """Admit new requests, then advance every in-flight prefill by
-        one ``chunk_tokens`` window (one jitted step for the batch)."""
+    def admit_chunked(self, reqs: List[Request]) -> None:
+        """Host-side admission for chunked prefill: reserve the prompt,
+        bind a slot and mark it in-flight — no compute.  The chunk
+        advance itself runs either serially (``run_chunk_job``) or as
+        part of a fused group sweep (``FusedGroup.prefill``)."""
         # admission: same cumulative lifetime check as the unchunked
         # path; prompts reserve immediately, so only the not-yet-
         # reserved growth of earlier admits carries into ``pending``
@@ -247,8 +388,12 @@ class Engine:
             r._seq_id = sid
             self._prefilling[slot] = 0
 
+    def export_prefill_job(self) -> Optional[PrefillJob]:
+        """Snapshot the in-flight chunk rows the fused prefill sweep
+        (or the serial chunk step) needs from this engine.  Returns
+        None when nothing is prefilling."""
         if not self._prefilling:
-            return 0
+            return None
         C = self.chunk_tokens
         slots = sorted(self._prefilling)
         B = len(slots)
@@ -262,35 +407,19 @@ class Engine:
             toks[i, :n] = r.prompt[pos:pos + n]
             offs[i] = pos
             clens[i] = n
-        seq_ids = [int(self.slot_seq[sl]) for sl in slots]
-        if self.cfg.ssm:
-            sl_idx = jnp.asarray(np.array(slots))
-            st = self.ssm_state[:, sl_idx]
-            tail = self.conv_tail[:, sl_idx]
-            # fresh sequences start from zero state
-            fresh = jnp.asarray((offs == 0).astype(np.float32))
-            st = st * (1.0 - fresh)[None, :, None, None, None]
-            tail = tail * (1.0 - fresh[None, :, None, None]).astype(
-                tail.dtype)
-            logits, new_st, new_tail = self._chunk_fn(
-                self.params, jnp.asarray(toks), jnp.asarray(clens),
-                st, tail)
-            self.ssm_state = self.ssm_state.at[:, sl_idx].set(new_st)
-            self.conv_tail = self.conv_tail.at[:, sl_idx].set(
-                new_tail.astype(self.conv_tail.dtype))
-        else:
-            table = self.view.block_table(seq_ids, self.max_blocks)
-            pool_k, pool_v, logits = self._chunk_fn(
-                self.params, jnp.asarray(toks), jnp.asarray(offs),
-                jnp.asarray(clens), self.pool.k, self.pool.v,
-                jnp.asarray(table))
-            self.pool.k, self.pool.v = pool_k, pool_v
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        return PrefillJob(slots=slots, reqs=[self.slots[sl] for sl in slots],
+                          seq_ids=[int(self.slot_seq[sl]) for sl in slots],
+                          toks=toks, offs=offs, clens=clens)
+
+    def apply_prefill_result(self, job: PrefillJob, nxt: np.ndarray) -> int:
+        """Commit one chunk advance back into engine bookkeeping
+        (shared by the serial and fused prefill paths).  ``nxt`` is the
+        greedy next token per job row (used when a prompt completes)."""
         done_tokens = 0
-        for i, sl in enumerate(slots):
+        for i, sl in enumerate(job.slots):
             r = self.slots[sl]
-            self._prefilling[sl] += int(clens[i])
-            done_tokens += int(clens[i])
+            self._prefilling[sl] += int(job.clens[i])
+            done_tokens += int(job.clens[i])
             if self._prefilling[sl] >= len(r.prompt):
                 del self._prefilling[sl]
                 # first generated token — same reserve-then-commit as
@@ -298,6 +427,51 @@ class Engine:
                 if self.view.append_tokens(r._seq_id, 1):
                     r.output.append(int(nxt[i]))
         return done_tokens
+
+    def run_chunk_job(self, job: PrefillJob) -> int:
+        """Advance one exported chunk job serially (attention families):
+        one jitted step over a power-of-2 row bucket."""
+        B = len(job)
+        Bp = _next_pow2(B)
+        toks, offs, clens, table = _pad_rows(
+            Bp, (job.toks, 0), (job.offs, 0), (job.clens, 0),
+            (self.view.block_table(job.seq_ids, self.max_blocks), -1))
+        pool_k, pool_v, logits = self._chunk_fn(
+            self.params, self.model_index, jnp.asarray(toks),
+            jnp.asarray(offs), jnp.asarray(clens), self.pool.k, self.pool.v,
+            jnp.asarray(table))
+        self.pool.k, self.pool.v = pool_k, pool_v
+        nxt = np.asarray(jnp.argmax(logits[:B], axis=-1))
+        return self.apply_prefill_result(job, nxt)
+
+    def _prefill_chunked(self, reqs: List[Request]) -> int:
+        """Admit new requests, then advance every in-flight prefill by
+        one ``chunk_tokens`` window (one jitted step for the batch)."""
+        self.admit_chunked(reqs)
+        if not self._prefilling:
+            return 0
+        if self.cfg.ssm:
+            return self._run_chunk_ssm()
+        return self.run_chunk_job(self.export_prefill_job())
+
+    def _run_chunk_ssm(self) -> int:
+        """Chunk advance for pure-SSM engines (state carry, no pool)."""
+        job = self.export_prefill_job()
+        sl_idx = jnp.asarray(np.array(job.slots))
+        st = self.ssm_state[:, sl_idx]
+        tail = self.conv_tail[:, sl_idx]
+        # fresh sequences start from zero state
+        fresh = jnp.asarray((job.offs == 0).astype(np.float32))
+        st = st * (1.0 - fresh)[None, :, None, None, None]
+        tail = tail * (1.0 - fresh[None, :, None, None]).astype(tail.dtype)
+        logits, new_st, new_tail = self._chunk_fn(
+            self.params, self.model_index, jnp.asarray(job.toks),
+            jnp.asarray(job.clens), st, tail)
+        self.ssm_state = self.ssm_state.at[:, sl_idx].set(new_st)
+        self.conv_tail = self.conv_tail.at[:, sl_idx].set(
+            new_tail.astype(self.conv_tail.dtype))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        return self.apply_prefill_result(job, nxt)
 
     # ------------------------------------------------------------------
     def export_decode_job(self) -> Optional[DecodeJob]:
@@ -390,22 +564,33 @@ class Engine:
         job = job or self.export_decode_job()
         if job is None:
             return 0
+        B = len(job)
         lens = self.view.seq_lens(job.seq_ids)  # incl. reserved current token
         table = self.view.block_table(job.seq_ids, self.max_blocks)
+        last_tok = job.last_tok
+        if not self.cfg.ssm:
+            # power-of-2 row bucket (padded rows: len 1, table −1 —
+            # one masked garbage softmax, discarded below).  SSM/hybrid
+            # keep exact rows: their per-slot state scatter must not
+            # see duplicated padded slot indices.
+            Bp = _next_pow2(B)
+            if Bp != B:
+                last_tok, lens, table = _pad_rows(
+                    Bp, (job.last_tok, 0), (lens, 1), (table, -1))
         sl = jnp.asarray(np.array(job.slots))
 
         ssm_state = self.ssm_state[:, sl] if self.cfg.ssm else None
         conv_tail = self.conv_tail[:, sl] if self.cfg.ssm else None
         pool_k, pool_v, logits, new_ssm, new_tail = self._decode_fn(
-            self.params, jnp.asarray(job.last_tok), jnp.asarray(lens),
-            self.pool.k, self.pool.v, jnp.asarray(table),
+            self.params, self.model_index, jnp.asarray(last_tok),
+            jnp.asarray(lens), self.pool.k, self.pool.v, jnp.asarray(table),
             ssm_state, conv_tail)
         self.pool.k, self.pool.v = pool_k, pool_v
         if self.cfg.ssm:
             prev_ssm, prev_tail = self.ssm_state, self.conv_tail
             self.ssm_state = self.ssm_state.at[:, sl].set(new_ssm)
             self.conv_tail = self.conv_tail.at[:, sl].set(new_tail)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(jnp.argmax(logits[:B], axis=-1))
         toks = self.apply_decode_result(job, nxt)
         if self.cfg.ssm and self._rolled_rows:
             # rolled-back rows must retry from the PRE-step state: the
@@ -434,8 +619,9 @@ class Engine:
 
         The signature pins everything that shapes the stacked param
         tree and the fused computation: layer geometry, head layout,
-        projection extras, vocab padding, param dtype and the device
-        block-table width.
+        projection extras, vocab padding, param dtype, the device
+        block-table width and the chunked-prefill window (the fused
+        prefill sweep needs one common chunk shape).
         """
         cfg = self.cfg
         if cfg.family not in ("dense", "vlm", "audio") or cfg.ssm \
@@ -445,23 +631,31 @@ class Engine:
                 cfg.n_kv_heads, cfg.hd, cfg.d_ff, cfg.vocab_size,
                 cfg.qkv_bias, cfg.qk_norm, cfg.rope_theta, cfg.rms_eps,
                 cfg.tie_embeddings, cfg.frontend_dim, cfg.n_prefix_tokens,
-                str(self.params["tok"]["embed"].dtype), self.max_blocks)
+                str(self.params["tok"]["embed"].dtype), self.max_blocks,
+                self.chunk_tokens)
 
 
 # ---------------------------------------------------------------------------
 # jitted step implementations (XLA reference path)
+#
+# Every impl takes a STACKED param tree ([M, ...] leading model axis)
+# plus a model index; the per-model slice happens at trace time inside
+# the program (``_select_model``), so fused-group members and the M=1
+# singleton case run off the same buffers with zero weight copies.
 # ---------------------------------------------------------------------------
-def _prefill_chunk_impl(params, toks, offs, clens, pool_k, pool_v, table,
-                        *, cfg: ModelConfig):
+def _prefill_chunk_impl(params, midx, toks, offs, clens, pool_k, pool_v,
+                        table, *, cfg: ModelConfig):
     """One chunked-prefill step: process C prompt tokens per sequence at
     absolute positions offs+i, writing KV into the pool and attending
     against everything written so far.  Garbage KV at padded positions
     (i ≥ clens) lands on future decode slots, which decode overwrites
     before attending — harmless by construction."""
+    _note_trace("prefill_chunk")
+    p = _select_model(params, midx)
     B, C = toks.shape
-    x = params["tok"]["embed"][toks]
+    x = p["tok"]["embed"][toks]
     positions = offs[:, None] + jnp.arange(C)[None, :]
-    lp = params["layers"]
+    lp = p["layers"]
 
     attn_li = 0
     for li in range(cfg.n_layers):
@@ -482,19 +676,21 @@ def _prefill_chunk_impl(params, toks, offs, clens, pool_k, pool_v, table,
 
     idx = jnp.maximum(clens - 1, 0)
     x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
-    logits = lm_logits(x_last, params["tok"], cfg)[..., :cfg.vocab_size]
+    logits = lm_logits(x_last, p["tok"], cfg)[..., :cfg.vocab_size]
     return pool_k, pool_v, logits
 
 
-def _prefill_chunk_ssm_impl(params, toks, clens, ssm_state, conv_tail, *,
-                            cfg: ModelConfig):
+def _prefill_chunk_ssm_impl(params, midx, toks, clens, ssm_state, conv_tail,
+                            *, cfg: ModelConfig):
     """Chunked prefill for pure-SSM models: the mixer's conv-tail +
     state carry IS the chunk boundary.  ``clens`` masks padded chunk
     positions (dt=0 ⇒ state frozen past the true chunk length)."""
+    _note_trace("prefill_chunk_ssm")
+    p = _select_model(params, midx)
     B, C = toks.shape
-    x = params["tok"]["embed"][toks]
+    x = p["tok"]["embed"][toks]
     mask = jnp.arange(C)[None, :] < clens[:, None]
-    lp = params["layers"]
+    lp = p["layers"]
     new_ssm = ssm_state
     new_tail = conv_tail
     for li in range(cfg.n_layers):
@@ -507,16 +703,19 @@ def _prefill_chunk_ssm_impl(params, toks, clens, ssm_state, conv_tail, *,
         new_tail = new_tail.at[li].set(tail.astype(new_tail.dtype))
     idx = jnp.maximum(clens - 1, 0)
     x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
-    logits = lm_logits(x_last, params["tok"], cfg)[..., :cfg.vocab_size]
+    logits = lm_logits(x_last, p["tok"], cfg)[..., :cfg.vocab_size]
     return logits, new_ssm, new_tail
-def _prefill_impl(params, toks, lens, pool_k, pool_v, table, *,
+
+
+def _prefill_impl(params, midx, toks, lens, pool_k, pool_v, table, *,
                   cfg: ModelConfig):
     """Prefill: full causal forward, write KV/state caches, last logits."""
+    _note_trace("prefill")
+    p = _select_model(params, midx)
     B, S = toks.shape
-    x = params["tok"]["embed"][toks]
+    x = p["tok"]["embed"][toks]
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    lp = params["layers"]
-    n_attn_seen = 0  # static counter for attn layer index within cache
+    lp = p["layers"]
 
     new_ssm = None
     new_tail = None
@@ -561,7 +760,7 @@ def _prefill_impl(params, toks, lens, pool_k, pool_v, table, *,
             new_ssm = new_ssm.at[li].set(fstate)
             new_tail = new_tail.at[li].set(tail.astype(x.dtype))
             if cfg.family == "hybrid" and (li + 1) % cfg.attn_every == 0:
-                sa = params["shared_attn"]
+                sa = p["shared_attn"]
                 x, pool_k, pool_v = attn_layer(x, 0, attn_li, sa,
                                                pool_k, pool_v)
                 attn_li += 1
@@ -571,21 +770,23 @@ def _prefill_impl(params, toks, lens, pool_k, pool_v, table, *,
     # logits at the true last prompt token
     idx = jnp.maximum(lens - 1, 0)
     x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
-    logits = lm_logits(x_last, params["tok"], cfg)[..., :cfg.vocab_size]
+    logits = lm_logits(x_last, p["tok"], cfg)[..., :cfg.vocab_size]
     return pool_k, pool_v, logits, new_ssm, new_tail
 
 
-def _decode_impl(params, last_tok, lens, pool_k, pool_v, table,
+def _decode_impl(params, midx, last_tok, lens, pool_k, pool_v, table,
                  ssm_state, conv_tail, *, cfg: ModelConfig):
     """One decode step: write KV of current token, attend, next logits.
 
     ``lens`` includes the current token (its slot is already reserved);
     its position is lens-1.
     """
+    _note_trace("decode")
+    p = _select_model(params, midx)
     B = last_tok.shape[0]
-    x = params["tok"]["embed"][last_tok]                    # [B,d]
+    x = p["tok"]["embed"][last_tok]                         # [B,d]
     pos = (lens - 1).astype(jnp.int32)
-    lp = params["layers"]
+    lp = p["layers"]
 
     new_ssm = ssm_state
     new_tail = conv_tail
@@ -621,14 +822,14 @@ def _decode_impl(params, last_tok, lens, pool_k, pool_v, table,
             new_ssm = new_ssm.at[li].set(st_i)
             new_tail = new_tail.at[li].set(tail_i)
             if cfg.family == "hybrid" and (li + 1) % cfg.attn_every == 0:
-                sa = params["shared_attn"]
+                sa = p["shared_attn"]
                 x, pool_k, pool_v = attn_layer(x, 0, attn_li, sa,
                                                pool_k, pool_v)
                 attn_li += 1
                 h2 = rms_norm(x, sa["ln2"][0], cfg.rms_eps)
                 x = x + mlp(h2, sa, 0)
 
-    logits = lm_logits(x, params["tok"], cfg)[..., :cfg.vocab_size]
+    logits = lm_logits(x, p["tok"], cfg)[..., :cfg.vocab_size]
     return pool_k, pool_v, logits, new_ssm, new_tail
 
 
@@ -650,6 +851,7 @@ def _fused_decode_impl(params, toks, lens, pool_k, pool_v, tables, *,
     tables: [M, R, W] int32 group bases (−1 padded)
     Returns (pool_k, pool_v, logits [M, R, vocab]).
     """
+    _note_trace("fused_decode")
     M, R = toks.shape
     W = tables.shape[2]
     lp = params["layers"]
@@ -688,3 +890,84 @@ def _fused_decode_impl(params, toks, lens, pool_k, pool_v, tables, *,
     logits = jax.vmap(lambda xm, tokm: lm_logits(xm, tokm, cfg))(
         x, params["tok"])
     return pool_k, pool_v, logits[..., :cfg.vocab_size]
+
+
+def _fused_prefill_chunk_impl(params, toks, offs, clens, pool_k, pool_v,
+                              tables, *, cfg: ModelConfig):
+    """Fused multi-LLM chunked-prefill sweep (DESIGN.md §2).
+
+    One jitted step advances every in-flight prompt chunk of every
+    colocated same-architecture engine: projections/MLP are batched
+    contractions over the stacked model axis M, while KV writes and
+    chunk attention flatten all M×R rows over per-row-resolved physical
+    block ids — the prefill-phase mirror of ``_fused_decode_impl``.
+
+    params: engine param trees stacked on a leading [M] axis
+    toks: [M, R, C] int32 chunk tokens (zero on padded rows)
+    offs: [M, R] absolute chunk start positions (0 on padded rows)
+    clens: [M, R] true chunk lengths (0 on padded rows)
+    tables: [M, R, W] int32 group bases (−1 on padded rows, so their
+        KV writes drop; their attention reads are discarded host-side)
+    Returns (pool_k, pool_v, logits [M, R, vocab]).
+    """
+    _note_trace("fused_prefill_chunk")
+    M, R, C = toks.shape
+    W = tables.shape[2]
+    lp = params["layers"]
+    n_h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    x = jax.vmap(lambda e, t: e[t])(params["tok"]["embed"], toks)  # [M,R,C,d]
+    positions = offs[..., None] + jnp.arange(C)[None, None, :]     # [M,R,C]
+    flat_table = tables.reshape(M * R, W)
+    flat_offs = offs.reshape(M * R)
+
+    for li in range(cfg.n_layers):
+        def qkv_m(xm, lpm, posm, li=li):
+            h = rms_norm(xm, lpm["ln1"][li], cfg.rms_eps)
+            return attn_qkv(h, lpm, li, cfg, posm)       # [R,C,{H,KV},hd]
+
+        def post_m(xm, om, lpm, li=li):
+            xm = xm + om.reshape(R, C, -1) @ lpm["wo"][li]
+            h = rms_norm(xm, lpm["ln2"][li], cfg.rms_eps)
+            return xm + mlp(h, lpm, li)
+
+        q, k, v = jax.vmap(qkv_m)(x, lp, positions)
+        pool_k, pool_v = cache_ops.write_tokens(
+            pool_k, pool_v, k.reshape(M * R, C, n_kv, hd),
+            v.reshape(M * R, C, n_kv, hd), flat_table, flat_offs, li, n_kv)
+        phys = cache_ops.resolve_physical_blocks(flat_table, li, n_kv)
+        o = cache_ops.fused_paged_chunk_attention(
+            q.reshape(M * R, C, n_h, hd), pool_k, pool_v, phys, flat_offs)
+        x = jax.vmap(post_m)(x, o.reshape(M, R, C, n_h, hd), lp)
+
+    idx = jnp.maximum(clens - 1, 0)                                # [M,R]
+    x_last = jnp.take_along_axis(x, idx[..., None, None], axis=2)[:, :, 0]
+    logits = jax.vmap(lambda xm, tokm: lm_logits(xm, tokm, cfg))(
+        x_last, params["tok"])
+    return pool_k, pool_v, logits[..., :cfg.vocab_size]
+
+
+# ---------------------------------------------------------------------------
+# shared jit cache
+# ---------------------------------------------------------------------------
+# (impl, donated arg positions).  Donated buffers are the pool arena
+# (or the SSM carry for the ssm chunk step) — consumed and returned.
+_IMPL_TABLE = {
+    "prefill": (_prefill_impl, (4, 5)),
+    "decode": (_decode_impl, (4, 5)),
+    "chunk": (_prefill_chunk_impl, (5, 6)),
+    "chunk_ssm": (_prefill_chunk_ssm_impl, (4, 5)),
+    "fused_decode": (_fused_decode_impl, (3, 4)),
+    "fused_prefill_chunk": (_fused_prefill_chunk_impl, (4, 5)),
+}
+
+
+@lru_cache(maxsize=None)
+def jitted_step(kind: str, cfg_key: ModelConfig):
+    """Memoized jitted step, shared by every engine with the same
+    *geometry* (``Engine.cfg_key`` strips the model name).  Without
+    this cache each engine owns a private ``jax.jit`` wrapper and
+    colocated instances of one architecture recompile identical
+    programs N times."""
+    impl, donate = _IMPL_TABLE[kind]
+    return jax.jit(partial(impl, cfg=cfg_key), donate_argnums=donate)

@@ -71,6 +71,19 @@ class BlockAllocator:
                 merged.append((s, e))
         self._free = merged
 
+    def grow(self, n: int) -> None:
+        """Extend the arena by ``n`` head-blocks of new free space
+        (zero-copy weight de-dup grants reclaimed HBM back to the
+        pool — see UnifiedKVPool.grow)."""
+        if n <= 0:
+            return
+        start = self.n_blocks
+        self.n_blocks += n
+        if self._free and self._free[-1][1] == start:
+            self._free[-1] = (self._free[-1][0], start + n)
+        else:
+            self._free.append((start, start + n))
+
     @property
     def free_blocks(self) -> int:
         return self.n_blocks - self.used
@@ -238,6 +251,39 @@ class UnifiedKVPool:
     @property
     def dtype_bytes(self) -> int:
         return jnp.dtype(self.dtype).itemsize
+
+    def hbm_bytes(self) -> int:
+        """Device bytes held by the arena (k + v)."""
+        return int(self.k.nbytes) + int(self.v.nbytes)
+
+    def grow(self, extra_blocks: int) -> int:
+        """Extend the arena by ``extra_blocks`` head-blocks.
+
+        The zero-copy stacked-weights scheme (DESIGN.md §2) frees one
+        full weight copy per fused group; those bytes are granted back
+        to the pool here — the paper's memory-multiplexing argument in
+        reverse: reclaimed weight HBM becomes KV head-blocks, which
+        admit more sequences.  Returns the blocks actually added.
+        """
+        if extra_blocks <= 0:
+            return 0
+        n = self.n_head_blocks + extra_blocks
+        if self.allocator.used == 0:
+            # no sequence holds blocks, so arena contents are dead —
+            # reallocate at the final size instead of concatenating
+            # (which would transiently hold 2× the arena)
+            self.k = jnp.zeros((n, self.block_tokens, self.head_dim),
+                               self.dtype)
+            self.v = jnp.zeros((n, self.block_tokens, self.head_dim),
+                               self.dtype)
+        else:
+            pad = jnp.zeros((extra_blocks, self.block_tokens,
+                             self.head_dim), self.dtype)
+            self.k = jnp.concatenate([self.k, pad])
+            self.v = jnp.concatenate([self.v, jnp.zeros_like(pad)])
+        self.allocator.grow(extra_blocks)
+        self.n_head_blocks = n
+        return extra_blocks
 
     def register_model(self, cfg: ModelConfig, quota: int) -> ModelCacheView:
         assert cfg.attn_free or cfg.hd == self.head_dim or True, \

@@ -8,17 +8,22 @@ sharing one ``UnifiedKVPool``:
   * per-LLM token-block quotas bound KV usage (fairness, Eq. 2's R);
   * quotas adapt periodically from low- to high-utilization LLMs.
 
-On TPU the "fill remaining SMs" of the paper becomes fusing the decode
-batches of all colocated LLMs into the same scheduler tick (DESIGN.md
-§2).  With ``fused=True`` this runtime executes that fusion for real:
-same-architecture engines' weights are stacked once (cached per group)
-and every tick runs ONE jitted batched step — cross-model rows share a
-single paged-attention + MLP sweep over the unified pool — instead of
-N sequential ``Engine.decode`` dispatches.  Heterogeneous leftovers
+On TPU the "fill remaining SMs" of the paper becomes fusing the jobs
+of all colocated LLMs into the same scheduler tick (DESIGN.md §2).
+With ``fused=True`` this runtime executes that fusion for real, in
+BOTH phases: same-architecture engines form a ``FusedGroup`` whose
+stacked weight tree is the *single* weight copy for the whole group
+(members index it on the leading model axis — zero-copy), every tick
+runs ONE jitted decode sweep, and — when the engines use chunked
+prefill — ONE jitted prefill sweep advances every member's in-flight
+prompt chunks.  The HBM reclaimed by de-duplicating weights is granted
+to the unified pool as extra head-blocks (more admitted sequences —
+the paper's memory-multiplexing argument).  Heterogeneous leftovers
 (SSM engines keep their own scan, MoE its routed FFN, singleton
 architectures) fall back to the serial per-engine path in the same
-tick.  With ``fused=False`` every engine decodes back-to-back and the
-benefit of colocation shows up only as higher aggregate tokens/s than
+tick — off the same stacked buffers when they belong to a group.  With
+``fused=False`` every engine steps back-to-back and the benefit of
+colocation shows up only as higher aggregate tokens/s than
 FCFS/temporal multiplexing (benchmarks/fig9).
 
 ``policy``: "adbs" (paper), "fcfs" (temporal multiplexing baseline),
@@ -29,14 +34,14 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Deque, Dict, List
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import Engine, Request, _fused_decode_impl
+from repro.serving.engine import (Engine, Request, jitted_step, tree_bytes,
+                                  unique_tree_bytes)
 from repro.serving.kvcache import UnifiedKVPool, fused_block_tables
 
 
@@ -51,40 +56,62 @@ class MuxStats:
         return len(self.finished) / max(horizon, 1e-9)
 
 
-class FusedDecodeGroup:
-    """Colocated engines whose decode steps run as ONE jitted sweep.
+class FusedGroup:
+    """Colocated engines whose decode (and chunked-prefill) steps run
+    as ONE jitted sweep.
 
     Engines land in the same group when ``Engine.fusion_signature()``
-    matches (same layer/head geometry, vocab padding, param dtype and
-    block-table width).  Their weight trees are stacked once on a
-    leading model axis and cached here — per-tick work is only the
-    (small) host-side batch assembly, so the fused step amortizes both
-    dispatch overhead and kernel-launch count across the group.
-
-    Known cost: the stacked tree is a second copy of each member's
-    weights (engines keep their own for prefill and the lone-engine
-    fallback), so fused groups pay ~2× weight memory.  De-duplicating
-    (engines indexing one stacked buffer) is the planned fix once the
-    prefill path can consume stacked trees — see DESIGN.md §2.
+    matches (same layer/head geometry, vocab padding, param dtype,
+    block-table width and chunk window).  Their weight trees are
+    concatenated once on a leading model axis and the members *adopt*
+    the stacked tree (``Engine.adopt_stacked``): each engine's private
+    copy is freed and every step — the fused sweeps, serial prefill,
+    the lone-active-engine fallback — indexes the one shared buffer.
+    A fused group therefore pays ~1× weight memory (asserted by
+    ``unique_tree_bytes`` in tests).  ``reclaimed_bytes`` is the
+    second full weight copy fused serving paid BEFORE de-duplication
+    (private trees alongside the stacked cache — the "known cost" this
+    design removes); the scheduler grants exactly those bytes to the
+    pool as extra head-blocks, so a fused deployment's HBM budget is
+    unchanged while the former duplicate-copy waste now admits
+    sequences.  Relative to *serial* serving the grant is additional
+    arena, sized only by what fusion used to waste.
     """
 
-    def __init__(self, engines: List[Engine]):
+    def __init__(self, engines: List[Engine],
+                 names: Optional[List[str]] = None):
         assert len(engines) >= 2
         sigs = {e.fusion_signature() for e in engines}
         assert len(sigs) == 1 and None not in sigs, \
             "fused group requires matching fusion signatures"
         self.engines = engines
+        self.names = list(names) if names else [e.cfg.name for e in engines]
         self.cfg = engines[0].cfg
+        self.cfg_key = engines[0].cfg_key
         self.max_blocks = engines[0].max_blocks
+        self.chunk_tokens = engines[0].chunk_tokens
         # fixed row count: padding every tick to max_slots keeps the
-        # jitted sweep at ONE compilation per group (a shrinking
+        # jitted sweeps at ONE compilation per group (a shrinking
         # active-row count would otherwise re-trace the whole stacked
         # forward for every distinct batch size)
         self.rows = max(e.max_slots for e in engines)
+        # zero-copy adoption: concatenate the members' [1, ...] stacks
+        # into the group tree, then point every member at it — the
+        # per-engine trees are freed, leaving exactly ONE weight copy
+        member_bytes = sum(tree_bytes(e.params) for e in engines)
         self.params = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *[e.params for e in engines])
-        self._fn = jax.jit(partial(_fused_decode_impl, cfg=self.cfg),
-                           donate_argnums=(3, 4))
+            lambda *xs: jnp.concatenate(xs, axis=0),
+            *[e.params for e in engines])
+        for m, e in enumerate(engines):
+            e.adopt_stacked(self.params, m)
+        self.reclaimed_bytes = member_bytes
+        self._decode_fn = jitted_step("fused_decode", self.cfg_key)
+        self._prefill_fn = (jitted_step("fused_prefill_chunk", self.cfg_key)
+                            if self.chunk_tokens else None)
+
+    def weight_bytes(self) -> int:
+        """Live weight bytes of the whole group (de-duplicated)."""
+        return unique_tree_bytes([e.params for e in self.engines])
 
     def decode(self, jobs) -> int:
         """Run one fused decode step.  ``jobs`` is aligned with
@@ -101,7 +128,7 @@ class FusedDecodeGroup:
             [(eng.view, job.seq_ids if job is not None else [])
              for eng, job in zip(self.engines, jobs)],
             rows, self.max_blocks)
-        pool.k, pool.v, logits = self._fn(
+        pool.k, pool.v, logits = self._decode_fn(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             pool.k, pool.v, jnp.asarray(tables))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))        # [M, rows]
@@ -110,6 +137,42 @@ class FusedDecodeGroup:
             if job is not None:
                 total += eng.apply_decode_result(job, nxt[m, :len(job)])
         return total
+
+    def prefill(self, jobs) -> int:
+        """Run one fused chunked-prefill sweep: every member's in-flight
+        prompt chunks advance by one window in ONE jitted step.
+        ``jobs`` is aligned with ``self.engines`` (None where a member
+        has nothing prefilling — its rows are padded: −1 tables drop
+        the KV writes, zero chunk lengths mark the logits dead).
+        Returns #prompt tokens processed."""
+        pool = self.engines[0].pool
+        rows, C, M = self.rows, self.chunk_tokens, len(self.engines)
+        toks = np.zeros((M, rows, C), np.int32)
+        offs = np.zeros((M, rows), np.int32)
+        clens = np.zeros((M, rows), np.int32)
+        tables = np.full((M, rows, self.max_blocks), -1, np.int32)
+        for m, (eng, job) in enumerate(zip(self.engines, jobs)):
+            if job is None:
+                continue
+            b = len(job)
+            toks[m, :b] = job.toks
+            offs[m, :b] = job.offs
+            clens[m, :b] = job.clens
+            tables[m, :b] = eng.view.block_table(job.seq_ids,
+                                                 self.max_blocks)
+        pool.k, pool.v, logits = self._prefill_fn(
+            self.params, jnp.asarray(toks), jnp.asarray(offs),
+            jnp.asarray(clens), pool.k, pool.v, jnp.asarray(tables))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))        # [M, rows]
+        total = 0
+        for m, (eng, job) in enumerate(zip(self.engines, jobs)):
+            if job is not None:
+                total += eng.apply_prefill_result(job, nxt[m, :len(job)])
+        return total
+
+
+# backwards-compatible name (the group now fuses prefill too)
+FusedDecodeGroup = FusedGroup
 
 
 class MuxScheduler:
@@ -127,27 +190,44 @@ class MuxScheduler:
         self._decode_rr = 0
         self.stats = MuxStats()
         self.clock = 0.0  # logical time (ticks); callers may use wall time
-        # fused multi-LLM decode tick (DESIGN.md §2): group colocated
-        # engines by fusion signature; stacked weights are cached per
-        # group for the lifetime of the scheduler.  fcfs (the temporal
-        # baseline) never reaches the fused tick — don't pay the
-        # stacked-weight copy for it.
+        # fused multi-LLM tick (DESIGN.md §2): group colocated engines
+        # by fusion signature; members adopt ONE stacked weight tree
+        # per group (zero-copy) for the lifetime of the scheduler, and
+        # the HBM the de-dup reclaims is granted to the pool as extra
+        # head-blocks (split across the group's views as quota).  fcfs
+        # (the temporal baseline) never reaches the fused tick — don't
+        # regroup its weights for it.
         self.fused = fused and policy != "fcfs"
-        self.fused_groups: List[FusedDecodeGroup] = []
-        self._serial_names = list(engines)
+        self.fused_groups: List[FusedGroup] = []
+        self._serial_names = list(engines)          # serial decode set
+        self._prefill_serial_names = list(engines)  # serial prefill set
+        self.reclaimed_weight_bytes = 0
         if self.fused:
             by_sig: Dict[tuple, List[str]] = {}
             for name, eng in engines.items():
                 sig = eng.fusion_signature()
                 if sig is not None:
                     by_sig.setdefault(sig, []).append(name)
-            grouped = set()
+            grouped, chunk_grouped = set(), set()
             for names in by_sig.values():
                 if len(names) >= 2:
-                    self.fused_groups.append(
-                        FusedDecodeGroup([engines[n] for n in names]))
+                    grp = FusedGroup([engines[n] for n in names], names)
+                    self.fused_groups.append(grp)
                     grouped.update(names)
+                    if grp.chunk_tokens:
+                        chunk_grouped.update(names)
+                    # zero-copy dividend: de-duplicated weight bytes
+                    # become KV head-blocks for the group's LLMs
+                    granted = pool.grow(grp.reclaimed_bytes
+                                        // pool.head_block_bytes)
+                    share = granted // len(grp.engines)
+                    if share:
+                        for e in grp.engines:
+                            e.view.quota += share
+                    self.reclaimed_weight_bytes += grp.reclaimed_bytes
             self._serial_names = [n for n in engines if n not in grouped]
+            self._prefill_serial_names = [n for n in engines
+                                          if n not in chunk_grouped]
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -158,27 +238,37 @@ class MuxScheduler:
             len(e.active_slots()) for e in self.engines.values())
 
     # ------------------------------------------------------------------
+    def _pull_batch(self, name: str) -> List[Request]:
+        """Pop an admissible batch for one LLM (ADBS admission: whole-
+        lifetime quota check, cumulative across the batch)."""
+        q = self.queues[name]
+        eng = self.engines[name]
+        if q and eng.lifetime_blocks(q[0]) > eng.view.quota:
+            # adapt_quotas shrank this LLM's quota below the head
+            # request's whole lifetime — it would re-queue forever;
+            # pull spare quota back before trying to admit
+            self.pool.grant_min_quota(eng.view,
+                                      eng.lifetime_blocks(q[0]))
+        batch: List[Request] = []
+        pending = 0   # lifetime blocks of already-selected requests
+        while q and len(batch) < len(eng.free_slots()):
+            if eng.can_admit(q[0], pending):
+                pending += eng.lifetime_blocks(q[0])
+                batch.append(q.popleft())
+            else:
+                break
+        return batch
+
     def _run_prefill_round_robin(self) -> bool:
-        """Try one prefill job round-robin across LLMs (ADBS main loop)."""
-        n = len(self._names)
+        """Try one prefill job round-robin across the serially-prefilled
+        LLMs (ADBS main loop).  Fused-prefill group members are handled
+        by ``_run_prefill_fused_groups`` instead."""
+        names = self._prefill_serial_names
+        n = len(names)
         for i in range(n):
-            name = self._names[(self._prefill_rr + i) % n]
-            q = self.queues[name]
+            name = names[(self._prefill_rr + i) % n]
             eng = self.engines[name]
-            if q and eng.lifetime_blocks(q[0]) > eng.view.quota:
-                # adapt_quotas shrank this LLM's quota below the head
-                # request's whole lifetime — it would re-queue forever;
-                # pull spare quota back before trying to admit
-                self.pool.grant_min_quota(eng.view,
-                                          eng.lifetime_blocks(q[0]))
-            batch = []
-            pending = 0   # lifetime blocks of already-selected requests
-            while q and len(batch) < len(eng.free_slots()):
-                if eng.can_admit(q[0], pending):
-                    pending += eng.lifetime_blocks(q[0])
-                    batch.append(q.popleft())
-                else:
-                    break
+            batch = self._pull_batch(name)
             if batch or eng.has_prefill_work():
                 toks = eng.prefill(batch)
                 for r in batch:
@@ -187,6 +277,42 @@ class MuxScheduler:
                 self._prefill_rr = (self._prefill_rr + i + 1) % n
                 return True
         return False
+
+    def _run_prefill_fused_groups(self) -> bool:
+        """Fused multi-LLM prefill tick: admit round-robin into every
+        chunked group member (host-side bookkeeping only), then advance
+        ALL members' in-flight chunks in one jitted sweep per group —
+        the prefill-phase mirror of the fused decode tick."""
+        ran = False
+        for grp in self.fused_groups:
+            if grp.chunk_tokens is None:
+                continue
+            now = time.perf_counter()
+            for name, eng in zip(grp.names, grp.engines):
+                batch = self._pull_batch(name)
+                if batch:
+                    eng.admit_chunked(batch)
+                    for r in batch:
+                        r.prefill_done = now
+            jobs = [eng.export_prefill_job() for eng in grp.engines]
+            n_active = sum(j is not None for j in jobs)
+            if n_active == 0:
+                continue
+            if n_active == 1:
+                # a lone prefilling engine gains nothing from the fused
+                # sweep — run its exported job serially (off the SAME
+                # stacked buffers, via its model index)
+                m = next(i for i, j in enumerate(jobs) if j is not None)
+                self.stats.prefill_tokens += \
+                    grp.engines[m].run_chunk_job(jobs[m])
+            else:
+                self.stats.prefill_tokens += grp.prefill(jobs)
+            ran = True
+        return ran
+
+    def _run_prefill(self) -> bool:
+        ran = self._run_prefill_fused_groups() if self.fused else False
+        return self._run_prefill_round_robin() or ran
 
     def _run_decode_round_robin(self) -> int:
         """Fill the tick with decode jobs from every LLM (colocation)."""
@@ -246,7 +372,7 @@ class MuxScheduler:
         """One scheduler iteration (paper Alg. 3 main loop)."""
         self.stats.ticks += 1
         if self.policy == "adbs":
-            self._run_prefill_round_robin()
+            self._run_prefill()
             # decode jobs fill the remaining resources: one fused
             # multi-LLM sweep when fused=True, back-to-back otherwise
             self.stats.decode_tokens += self._decode_tick()
@@ -255,7 +381,7 @@ class MuxScheduler:
         elif self.policy == "round_robin":
             # no prefill priority, no quota adaptation
             if self.stats.ticks % 2 == 0:
-                self._run_prefill_round_robin()
+                self._run_prefill()
             self.stats.decode_tokens += self._decode_tick()
         elif self.policy == "fcfs":
             # temporal multiplexing: serve the LLM with the oldest

@@ -42,17 +42,20 @@ def _submit(mux, n_reqs, max_new=4, seed=7):
 
 def _pool_state(mux):
     """Canonical host-side cache-state snapshot: per-model per-seq
-    token counts and block counts, per-view quota accounting, and the
+    token counts and block counts, per-view usage accounting, and the
     arena's used-block total.  Physical base ids are deliberately NOT
     compared — allocation ORDER is scheduler-path-dependent (serial
     ticks allocate in rotated engine order, the fused sweep in group
     order), so bases may differ while the logical state is identical.
+    Quotas are NOT compared either: the fused scheduler grants the
+    head-blocks reclaimed by weight de-duplication to the group's
+    views (DESIGN.md §2), so fused quotas are larger by design.
     """
     state = {}
     for name, eng in mux.engines.items():
         state[name] = ({sid: (len(sc.bases), sc.n_tokens)
                         for sid, sc in eng.view.seqs.items()},
-                       eng.view.used, eng.view.quota)
+                       eng.view.used)
     state["__used__"] = mux.pool.allocator.used
     return state
 

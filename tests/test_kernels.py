@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.flash_prefill import (flash_prefill,
+                                         fused_paged_flash_prefill)
 from repro.kernels.paged_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 from repro.models.mamba2 import ssd_chunked
@@ -38,6 +39,37 @@ def test_flash_prefill_matches_ref(b, s, h, kv, hd, dtype):
     expect = ref.flash_prefill_ref(q, k, v)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("c,h,kv,hd", [
+    (8, 4, 2, 64),           # GQA 2:1
+    (4, 4, 4, 64),           # MHA
+])
+def test_fused_paged_flash_prefill_matches_oracle(c, h, kv, hd):
+    """Pallas fused_paged_flash_prefill (interpret mode) == XLA oracle
+    on a cross-model chunk batch with pre-resolved phys ids — the
+    prefill-phase mirror of the fused decode kernel test."""
+    from repro.serving import cache_ops
+    bt = 16
+    pool_k = jax.random.normal(jax.random.PRNGKey(0), (256, bt, hd),
+                               jnp.float32)
+    pool_v = jax.random.normal(jax.random.PRNGKey(1), (256, bt, hd),
+                               jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (4, c, h, hd), jnp.float32)
+    # rows from two "models": different layer offsets in the same arena
+    t0 = np.array([[0, 8, -1, -1], [16, 24, 32, -1]], np.int32)
+    t1 = np.array([[40, 48, -1, -1], [56, 64, 72, 80]], np.int32)
+    phys = jnp.concatenate([
+        cache_ops.resolve_physical_blocks(jnp.asarray(t0), 0, kv),
+        cache_ops.resolve_physical_blocks(jnp.asarray(t1), 1, kv)])
+    # mixed chunk offsets: row 0 is a fresh prompt, the rest mid-prompt
+    offs = jnp.asarray(np.array([0, 17, 5, 33], np.int32))
+    oracle = cache_ops.fused_paged_chunk_attention(
+        q, pool_k, pool_v, phys, offs)
+    out = fused_paged_flash_prefill(q, pool_k, pool_v, phys, offs,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("window", [32, 128])
