@@ -27,10 +27,18 @@ class LLMSpec:
     mean_output: int = 338
     tp: int = 1                 # intra-op parallelism degree
     sm_frac: float = 1.0        # compute fraction (MPS share / interleave)
+    # base architecture id when it differs from the (unit-unique) name —
+    # the placement→runtime bridge resolves configs by it; None means
+    # the name itself (minus any ``#i`` colocation tag) is the arch
+    arch: Optional[str] = None
 
     @property
     def name(self) -> str:
         return self.cfg.name
+
+    @property
+    def arch_id(self) -> str:
+        return self.arch or self.cfg.name.split("#")[0]
 
 
 def request_throughput(spec: LLMSpec, batch: int, unit_specs: Sequence[LLMSpec],

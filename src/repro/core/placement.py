@@ -15,9 +15,10 @@ arrival rate, place on the mesh with most free memory.
 from __future__ import annotations
 
 import itertools
+import json
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.config import ModelConfig
 from repro.core import costmodel as cm
@@ -58,6 +59,75 @@ class Placement:
                               for s in m.specs)
             lines.append(f"  mesh[{m.mesh_id}] x{m.n_devices}: {names or '—'}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# plan serialization — the placement → runtime bridge's wire format
+# ---------------------------------------------------------------------------
+# A plan JSON captures everything the runtime needs to instantiate real
+# colocated units from an optimizer output (serving/driver.py builds
+# one MuxScheduler per mesh): mesh sizes and, per LLM, its unit-unique
+# name, base architecture (``name`` minus any ``#i`` colocation tag),
+# arrival rate (quota split ∝ rate, like the simulator's initial
+# quotas) and the planned tp / sm_frac.  Model geometry is NOT
+# serialized — the loader resolves the architecture by name, so a plan
+# stays valid across config edits and the runtime is free to
+# substitute REDUCED variants for CPU-scale serving.
+
+def placement_to_json(pl: Placement) -> dict:
+    return {
+        "total_tpt": pl.total_tpt,
+        "meshes": [{
+            "mesh_id": m.mesh_id,
+            "n_devices": m.n_devices,
+            "specs": [{
+                "name": s.name,
+                "arch": s.arch_id,
+                "rate": s.rate,
+                "tp": s.tp,
+                "sm_frac": s.sm_frac,
+                "mean_prompt": s.mean_prompt,
+                "mean_output": s.mean_output,
+            } for s in m.specs],
+        } for m in pl.meshes],
+    }
+
+
+def placement_from_json(data: dict,
+                        resolve_cfg: Callable[[str], ModelConfig]
+                        ) -> Placement:
+    """Rebuild a ``Placement`` from its plan JSON.
+
+    ``resolve_cfg(arch)`` supplies the ``ModelConfig`` for each spec's
+    base architecture (e.g. ``repro.configs.get`` for paper-scale
+    geometry or ``configs.get_reduced`` for the CPU runtime); the
+    config is renamed to the spec's unit-unique ``name`` so colocated
+    instances of one architecture stay distinct.
+    """
+    meshes = []
+    for m in data["meshes"]:
+        specs = [LLMSpec(replace(resolve_cfg(s["arch"]), name=s["name"]),
+                         s["rate"],
+                         # optional in hand-written plans (ShareGPT
+                         # defaults, matching LLMSpec's)
+                         mean_prompt=int(s.get("mean_prompt", 161)),
+                         mean_output=int(s.get("mean_output", 338)),
+                         tp=int(s["tp"]),
+                         sm_frac=float(s["sm_frac"]), arch=s["arch"])
+                 for s in m["specs"]]
+        meshes.append(Mesh(int(m["mesh_id"]), int(m["n_devices"]), specs))
+    return Placement(meshes, float(data["total_tpt"]))
+
+
+def save_placement(pl: Placement, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(placement_to_json(pl), f, indent=1)
+
+
+def load_placement(path: str,
+                   resolve_cfg: Callable[[str], ModelConfig]) -> Placement:
+    with open(path) as f:
+        return placement_from_json(json.load(f), resolve_cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,13 @@ Scheduling policies *within* spatial-temporal units (Fig. 9):
   ``round_robin`` no prefill priority (alternating), fixed quotas
   ``fcfs``        strict arrival order across LLMs, no quotas
 
+Runtime counterpart: ``serving/mux.MuxScheduler`` runs the same three
+policy branches over REAL engines, and ``serving/driver.py`` measures
+them under the same SLO conventions (DESIGN.md §9) on the same
+``core/workload.py`` traces — each policy-bearing method below names
+its runtime twin so the two implementations stay auditable against
+each other.
+
 KV accounting is in bytes of the unit's unified pool: capacity =
 unit HBM − weights − activation reserve; per-LLM quotas bound usage and
 ADBS re-allocates quota from low- to high-utilization LLMs periodically
@@ -143,7 +150,9 @@ class UnitSim:
     def _lifetime_cost(self, st: LLMState, r: SimRequest) -> float:
         """Whole-lifetime KV reservation (Alg. 3's resource_enough also
         gates decode jobs; reserving prompt+output at admission is the
-        preemption-free equivalent, and matches the Engine's rule)."""
+        preemption-free equivalent).  Runtime twin:
+        ``Engine.lifetime_blocks`` — same prompt+output+1 rule, in
+        head-blocks instead of bytes (plus SSM state pages)."""
         if st.spec.cfg.ssm:
             return st._ssm_bytes() or 1.0
         per_tok = st.spec.cfg.kv_bytes_per_token()
@@ -151,7 +160,10 @@ class UnitSim:
 
     def _try_prefill_batch(self, st: LLMState) -> List[SimRequest]:
         """Admit waiting requests of one LLM into a prefill job (quota-
-        and pool-capacity-bounded)."""
+        and pool-capacity-bounded) — Alg. 3's ``resource_enough`` gate
+        over Eq. 2's per-LLM cache share.  Runtime twin:
+        ``MuxScheduler._pull_batch`` + ``Engine.can_admit``
+        (cumulative lifetime check across the batch)."""
         batch: List[SimRequest] = []
         free_pool = self.kv_capacity - self.kv_used
         quota_room = st.quota - st.kv_bytes
@@ -208,7 +220,11 @@ class UnitSim:
 
     # ------------------------------------------------------------------
     def _adapt_quotas(self) -> None:
-        """Alg. 3: move KV quota from low- to high-utilization LLMs."""
+        """Alg. 3's ``adapt_quota_periodically``: move KV quota from
+        low- to high-utilization LLMs.  Runtime twin:
+        ``UnifiedKVPool.adapt_quotas`` (same low→high move, bounded
+        step, min-quota floor), invoked from ``MuxScheduler.tick``
+        every ``adapt_every`` ticks."""
         if len(self.llms) < 2:
             return
         util = {}
@@ -241,7 +257,13 @@ class UnitSim:
         Policy variants: ``fcfs`` admits prefills in strict global
         arrival order and only when nothing decodes (the Fig. 9
         baseline); ``round_robin`` is the ADBS loop without quota
-        adaptation (fixed quotas)."""
+        adaptation (fixed quotas).
+
+        Runtime twin: ``MuxScheduler.tick`` — same branch structure
+        (prefill-priority round-robin, decode fill, periodic quota
+        adaptation), but over real engines where "decode jobs run
+        concurrently" is realized as the fused multi-LLM sweep
+        (DESIGN.md §2) instead of Eq. 3's max over decode times."""
         n = len(self._names)
         t_prefill = 0.0
         if self.policy == "fcfs":
@@ -287,7 +309,10 @@ class UnitSim:
         return t_round
 
     def _round_temporal(self) -> float:
-        """AlpaServe-style: serialized jobs, each at f=1."""
+        """AlpaServe-style: serialized jobs, each at f=1.  Runtime
+        twin: the ``fcfs`` branch of ``MuxScheduler.tick`` (oldest
+        waiting request picks the LLM, prefill+decode batch-wise to
+        completion, no quotas)."""
         n = len(self._names)
         t_total = 0.0
         # FCFS across LLMs: oldest waiting request picks the prefill
@@ -372,7 +397,13 @@ class SimReport:
 def _slo_reference_latency(spec: LLMSpec, req: RequestSpec,
                            hw: Hardware) -> float:
     """Single-job dedicated-hardware latency (the paper's 'single device
-    execution latency', min-TP for models that need >1 device)."""
+    execution latency', min-TP for models that need >1 device).
+
+    This is the simulator's side of the shared SLO convention
+    (DESIGN.md §9: attained iff E2E ≤ scale × reference).  Runtime
+    twins: ``serving/driver.calibrate_slo_refs`` (measured solo
+    probes) and ``TickCostModel.solo_reference`` (analytic, for the
+    deterministic clock)."""
     tp = cm.weight_devices_needed(spec.cfg, hw)
     t_p = cm.prefill_latency(spec.cfg, 1, req.prompt_len, tp=tp, f=1.0,
                              hw=hw)

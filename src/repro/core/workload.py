@@ -93,33 +93,63 @@ def power_law_rates(models: Sequence[str], alpha: float, max_rate: float,
 
 
 def sharegpt_lengths(rng: np.random.Generator, n: int,
-                     mean_prompt: int = 161, mean_output: int = 338
+                     mean_prompt: int = 161, mean_output: int = 338,
+                     max_len: int = 2048
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """Lognormal lengths matched to ShareGPT means (σ chosen to mimic
-    its heavy tail), clipped to [4, 2048]."""
+    its heavy tail), clipped to [4, max_len].  The paper-scale defaults
+    (161/338, §2.1) feed the simulator; the runtime driver
+    (serving/driver.py) passes reduced means so the same distribution
+    shape serves CPU-scale engines."""
     def ln(mean, sigma):
         mu = math.log(mean) - sigma ** 2 / 2
-        return np.clip(rng.lognormal(mu, sigma, n).astype(int), 4, 2048)
+        return np.clip(rng.lognormal(mu, sigma, n).astype(int), 4, max_len)
     return ln(mean_prompt, 0.9), ln(mean_output, 0.8)
 
 
-def synthesize(models: Sequence[str], alpha: float, max_rate: float,
-               horizon: float, seed: int = 0,
-               scale_to_avg: Optional[float] = None) -> Workload:
-    """Poisson arrivals per model at power-law rates over ``horizon`` s."""
+def poisson_trace(rates: Dict[str, float], horizon: float, seed: int = 0,
+                  mean_prompt: int = 161, mean_output: int = 338,
+                  max_len: int = 2048) -> Workload:
+    """Poisson arrivals per model at EXPLICIT per-model rates.
+
+    The arrival-process core shared by ``synthesize`` (power-law rates)
+    and by placement-driven serving, where the rates come from a plan's
+    ``LLMSpec``s instead (``serving/driver.units_from_placement`` +
+    ``launch/serve.py --placement``)."""
     rng = np.random.default_rng(seed)
-    rates = power_law_rates(models, alpha, max_rate, scale_to_avg)
     reqs: List[RequestSpec] = []
     for m, rate in rates.items():
         if rate <= 0:
             continue
         n_exp = rng.poisson(rate * horizon)
         times = np.sort(rng.uniform(0, horizon, n_exp))
-        pl, ol = sharegpt_lengths(rng, n_exp)
+        pl, ol = sharegpt_lengths(rng, n_exp, mean_prompt, mean_output,
+                                  max_len)
         reqs.extend(RequestSpec(m, float(t), int(p), int(o))
                     for t, p, o in zip(times, pl, ol))
     reqs.sort(key=lambda r: r.arrival)
-    return Workload(rates=rates, requests=reqs, horizon=horizon)
+    return Workload(rates=dict(rates), requests=reqs, horizon=horizon)
+
+
+def synthesize(models: Sequence[str], alpha: float, max_rate: float,
+               horizon: float, seed: int = 0,
+               scale_to_avg: Optional[float] = None,
+               mean_prompt: int = 161, mean_output: int = 338,
+               max_len: int = 2048) -> Workload:
+    """Poisson arrivals per model at power-law rates over ``horizon`` s.
+
+    One generator for BOTH consumers: the discrete-event simulator
+    (``core/simulator.simulate``) and the real-engine serving driver
+    (``serving/driver.serve_workload``) replay the same ``Workload``,
+    so runtime SLO numbers are directly comparable to the simulator's
+    predictions for the same trace.  ``mean_prompt`` / ``mean_output``
+    rescale the ShareGPT-shaped length distribution (the runtime's
+    reduced models use shorter sequences; the distribution shape and
+    the Poisson/power-law arrival process are unchanged).
+    """
+    rates = power_law_rates(models, alpha, max_rate, scale_to_avg)
+    return poisson_trace(rates, horizon, seed, mean_prompt, mean_output,
+                         max_len)
 
 
 def cumulative_rate_distribution(rates: Dict[str, float]) -> np.ndarray:

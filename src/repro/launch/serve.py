@@ -1,150 +1,196 @@
-"""Multi-LLM serving driver (CPU-scale, real engines).
+"""Multi-LLM SLO-attainment serving driver (CPU-scale, real engines).
 
-Colocates the requested architectures' REDUCED variants on one unified
-KV pool and serves a synthetic Poisson workload with the chosen
-scheduling policy — the end-to-end MuxServe pipeline at laptop scale.
-``--fused`` runs the fused multi-LLM tick (DESIGN.md §2): one jitted
-decode sweep per tick for same-architecture engines (and, with
-``--chunk-tokens``, one fused prefill sweep for their in-flight prompt
-chunks) off a single zero-copy stacked weight tree per group — the
-HBM reclaimed by the de-duplication is granted to the pool as extra
-head-blocks.  Repeating an arch (e.g. ``--archs qwen2-7b,qwen2-7b``)
-colocates independent instances.
+The end-to-end MuxServe pipeline at laptop scale: colocate the
+requested architectures' REDUCED variants on unified KV pools, replay
+a popularity-skewed Poisson workload (``core/workload.py`` — the same
+generator the simulator uses), and report per-LLM and aggregate
+TTFT/TPOT/E2E percentiles, goodput and SLO attainment
+(``serving/driver.py``; conventions in DESIGN.md §9).
+
+Units come from one of two sources:
+
+  * ``--archs a,b,...`` — one colocated unit holding every listed
+    architecture (repeat an arch, e.g. ``qwen2-7b,qwen2-7b``, to
+    colocate independent instances), rates power-law over the list;
+  * ``--placement plan.json`` — the placement → runtime bridge: a
+    ``core/placement.py`` plan instantiates one real unit per mesh
+    (quota split ∝ rate, fused where same-architecture).
+    ``--save-placement`` computes a plan for ``--archs`` at the
+    workload rates on ``--devices`` devices, writes the JSON, and
+    serves from it.
 
   PYTHONPATH=src python -m repro.launch.serve \
-      --archs qwen2-7b,mamba2-2.7b --policy adbs --rate 2.0 \
-      --horizon 10 --max-new 8
+      --archs qwen2-7b,qwen2-7b,mamba2-2.7b --policy adbs --fused \
+      --chunk-tokens 16 --alpha 2.1 --rate 2.0 --horizon 8
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Dict, List
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import json
 
 from repro import configs
 from repro.config import replace
-from repro.models.transformer import init_params
-from repro.serving.engine import (TRACE_COUNTS, Engine, Request,
-                                  unique_tree_bytes)
-from repro.serving.kvcache import UnifiedKVPool
-from repro.serving.mux import MuxScheduler
+from repro.core.placement import (load_placement, place, save_placement)
+from repro.core.workload import poisson_trace, power_law_rates
+from repro.serving.driver import (TickCostModel, build_unit_from_specs,
+                                  serve_workload, units_from_placement)
+from repro.serving.engine import TRACE_COUNTS, unique_tree_bytes
 
 
-def build_unit(archs: List[str], pool_blocks: int = 400_000,
-               max_slots: int = 4, seed: int = 0,
-               chunk_tokens: int = 0):
-    pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32)
-    engines: Dict[str, Engine] = {}
+def _unit_names(archs):
+    """Unit-unique engine names: repeated archs get a ``#i`` tag."""
+    names = []
     for i, a in enumerate(archs):
-        cfg = configs.get_reduced(a)
-        if cfg.name in engines:
-            # repeated arch → colocate a distinct instance (own weights,
-            # own quota) under a unique engine name
-            cfg = replace(cfg, name=f"{cfg.name}#{i}")
-        params = init_params(jax.random.PRNGKey(seed + i), cfg,
-                             jnp.float32)
-        view = pool.register_model(cfg, pool_blocks // len(archs))
-        engines[cfg.name] = Engine(cfg, params, view, max_slots=max_slots,
-                                   chunk_tokens=chunk_tokens or None)
-    return engines, pool
-
-
-def synth_requests(engines: Dict[str, Engine], rate: float,
-                   horizon: float, max_new: int, seed: int = 0
-                   ) -> List[Request]:
-    rng = np.random.default_rng(seed)
-    reqs: List[Request] = []
-    rid = 0
-    for name, eng in engines.items():
-        n = rng.poisson(rate * horizon)
-        times = np.sort(rng.uniform(0, horizon, n))
-        for t in times:
-            plen = int(rng.integers(4, 24))
-            prompt = list(rng.integers(1, eng.cfg.vocab_size, plen))
-            reqs.append(Request(rid, name, prompt, max_new, arrival=float(t)))
-            rid += 1
-    reqs.sort(key=lambda r: r.arrival)
-    return reqs
+        names.append(a if archs.count(a) == 1 else f"{a}#{i}")
+    return names
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--archs", default="qwen2-7b,mamba2-2.7b")
+    ap = argparse.ArgumentParser(
+        description="SLO-attainment serving over real colocated engines")
+    ap.add_argument("--archs", default="qwen2-7b,mamba2-2.7b",
+                    help="comma list of architectures to colocate "
+                         "(repeat one to colocate instances)")
     ap.add_argument("--policy", default="adbs",
                     choices=["adbs", "fcfs", "round_robin"])
-    ap.add_argument("--rate", type=float, default=2.0)
-    ap.add_argument("--horizon", type=float, default=8.0)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=2.1,
+                    help="power-law exponent of per-LLM rates (paper "
+                         "§4.2; larger = more popularity skew)")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="max per-LLM arrival rate (req/s)")
+    ap.add_argument("--horizon", type=float, default=8.0,
+                    help="arrival-window length (s)")
+    ap.add_argument("--mean-prompt", type=int, default=24,
+                    help="mean prompt length (ShareGPT-shaped dist; "
+                         "paper scale is 161)")
+    ap.add_argument("--mean-output", type=int, default=8,
+                    help="mean output length (paper scale is 338)")
+    ap.add_argument("--max-new", type=int, default=0,
+                    help="hard cap on output tokens (0 = uncapped)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk-tokens", type=int, default=0,
                     help="chunked prefill window (0 = whole-prompt jobs)")
     ap.add_argument("--fused", action="store_true",
-                    help="fused multi-LLM decode tick (one jitted sweep "
-                         "for same-architecture engines per tick)")
+                    help="fused multi-LLM tick (one jitted sweep per "
+                         "phase for same-architecture engines)")
+    ap.add_argument("--slo-scales", default="2,4,6,8,12,16",
+                    help="comma list of SLO scale factors")
+    ap.add_argument("--deterministic", action="store_true",
+                    help="logical tick-cost clock instead of wall time "
+                         "(reproducible SLO numbers; DESIGN.md §9)")
+    ap.add_argument("--pool-blocks", type=int, default=200_000)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--placement", default=None, metavar="PLAN_JSON",
+                    help="build units from a core/placement.py plan")
+    ap.add_argument("--save-placement", default=None, metavar="PLAN_JSON",
+                    help="optimize a placement for --archs at the "
+                         "workload rates, save it, and serve from it")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="cluster size for --save-placement")
+    ap.add_argument("--report", default=None, metavar="OUT_JSON",
+                    help="write the full ServeReport JSON here")
     args = ap.parse_args()
 
+    if args.placement and args.save_placement:
+        ap.error("--placement and --save-placement are mutually "
+                 "exclusive (load a plan OR optimize and save one)")
     archs = args.archs.split(",")
-    engines, pool = build_unit(archs, seed=args.seed,
-                               chunk_tokens=args.chunk_tokens)
+    names = _unit_names(archs)
+    slo_scales = tuple(float(s) for s in args.slo_scales.split(","))
+
+    # ---- units: placement bridge or a single colocated unit ----------
+    pl = None
+    if args.placement:
+        pl = load_placement(args.placement, configs.get_reduced)
+        print(f"[serve] placement plan {args.placement} "
+              f"(est. {pl.total_tpt:.2f} req/s):\n{pl.describe()}")
+        rates = {s.name: s.rate for m in pl.meshes for s in m.specs}
+    else:
+        rates = power_law_rates(names, args.alpha, args.rate)
+        if args.save_placement:
+            models_rates = []
+            for name, arch in zip(names, archs):
+                cfg = replace(configs.get(arch), name=name)
+                models_rates.append((cfg, rates[name]))
+            pl = place(models_rates, n_devices=args.devices,
+                       mean_prompt=args.mean_prompt,
+                       mean_output=args.mean_output)
+            save_placement(pl, args.save_placement)
+            print(f"[serve] optimized placement for {args.devices} devices "
+                  f"(est. {pl.total_tpt:.2f} req/s) → "
+                  f"{args.save_placement}:\n{pl.describe()}")
+    if pl is not None:
+        units = units_from_placement(
+            pl, pool_blocks=args.pool_blocks, max_slots=args.max_slots,
+            chunk_tokens=args.chunk_tokens, seed=args.seed,
+            policy=args.policy, fused=args.fused)
+    else:
+        specs = [(n, a, rates[n]) for n, a in zip(names, archs)]
+        units = [build_unit_from_specs(
+            specs, pool_blocks=args.pool_blocks,
+            max_slots=args.max_slots, chunk_tokens=args.chunk_tokens,
+            seed=args.seed, policy=args.policy, fused=args.fused)]
+
     if args.fused and args.policy == "fcfs":
         # fcfs is the temporal-multiplexing baseline: one LLM at a
-        # time, nothing to fuse — don't pretend otherwise
-        print("[serve] --fused has no effect under --policy fcfs; "
-              "ignoring")
-        args.fused = False
-    mux = MuxScheduler(engines, pool, policy=args.policy, fused=args.fused)
-    reqs = synth_requests(engines, args.rate, args.horizon, args.max_new,
-                          args.seed)
-    print(f"[serve] {len(reqs)} requests for {len(archs)} colocated LLMs, "
-          f"policy={args.policy}, fused={args.fused}")
-    if args.fused:
-        for g in mux.fused_groups:
+        # time, nothing to fuse — the scheduler already ignores it
+        print("[serve] --fused has no effect under --policy fcfs")
+    for u in units:
+        for g in u.fused_groups:
             print(f"[serve] fused group ({len(g.engines)} engines): "
                   f"{[e.cfg.name for e in g.engines]}, "
                   f"{'fused' if g.chunk_tokens else 'serial'} prefill, "
                   f"{g.weight_bytes() / 1e6:.1f} MB shared weights "
                   f"(zero-copy)")
-        if mux.reclaimed_weight_bytes:
+        if u.reclaimed_weight_bytes:
             print(f"[serve] weight de-dup reclaimed "
-                  f"{mux.reclaimed_weight_bytes / 1e6:.1f} MB → pool grew "
-                  f"to {pool.n_head_blocks} head-blocks")
+                  f"{u.reclaimed_weight_bytes / 1e6:.1f} MB → pool grew "
+                  f"to {u.pool.n_head_blocks} head-blocks")
 
-    t0 = time.perf_counter()
-    idx = 0
-    while idx < len(reqs) or mux.pending():
-        now = time.perf_counter() - t0
-        while idx < len(reqs) and reqs[idx].arrival <= now:
-            mux.submit(reqs[idx])
-            idx += 1
-        if mux.pending():
-            mux.tick()
-        elif idx < len(reqs):
-            time.sleep(min(0.01, reqs[idx].arrival - now))
-    wall = time.perf_counter() - t0
+    # ---- workload: shared generator with the simulator ---------------
+    wl = poisson_trace(rates, args.horizon, seed=args.seed,
+                       mean_prompt=args.mean_prompt,
+                       mean_output=args.mean_output)
+    src = "plan rates" if args.placement else f"α={args.alpha}"
+    print(f"[serve] {len(wl.requests)} requests over {args.horizon}s for "
+          f"{len(rates)} LLMs ({src}: "
+          f"{{{', '.join(f'{n}:{r:.2f}' for n, r in rates.items())}}}), "
+          f"policy={args.policy}, fused={args.fused}, "
+          f"clock={'logical' if args.deterministic else 'wall'}")
 
-    st = mux.stats
-    lat = [r.finish - (t0 + r.arrival) for r in st.finished if r.finish > 0]
-    print(f"[serve] finished {len(st.finished)}/{len(reqs)} in {wall:.1f}s "
-          f"→ {len(st.finished) / wall:.2f} req/s, "
-          f"{(st.prefill_tokens + st.decode_tokens) / wall:.0f} tok/s")
-    if lat:
-        print(f"[serve] latency p50={np.percentile(lat, 50):.2f}s "
-              f"p99={np.percentile(lat, 99):.2f}s")
-    print(f"[serve] pool utilization peak-free={pool.allocator.free_blocks}"
-          f"/{pool.n_head_blocks}, fragmentation="
-          f"{pool.allocator.fragmentation():.3f}")
-    for name, view in pool.views.items():
-        print(f"[serve]   {name}: quota={view.quota} used={view.used}")
-    print(f"[serve] HBM: "
-          f"{unique_tree_bytes([e.params for e in engines.values()]) / 1e6:.1f}"
-          f" MB weights (de-duplicated), {pool.hbm_bytes() / 1e6:.0f} MB "
-          f"pool arena")
+    cost = TickCostModel() if args.deterministic else None
+    if cost is None and len(units) > 1:
+        print("[serve] note: realtime mode ticks multiple units "
+              "sequentially on one host thread — per-mesh latencies "
+              "absorb the other meshes' compute; use --deterministic "
+              "to model units as parallel hardware")
+    report = serve_workload(units, wl, seed=args.seed,
+                            max_new_cap=args.max_new,
+                            slo_scales=slo_scales, cost=cost)
+
+    # ---- report ------------------------------------------------------
+    agg = report.aggregate
+    print(f"[serve] finished {agg.finished}/{agg.submitted} over "
+          f"{report.ticks} ticks in {report.wall_s:.1f}s wall")
+    for line in report.summary().splitlines():
+        print(f"[serve] {line}")
+    for u in units:
+        pool = u.pool
+        print(f"[serve] pool: free={pool.allocator.free_blocks}"
+              f"/{pool.n_head_blocks} head-blocks, fragmentation="
+              f"{pool.allocator.fragmentation():.3f}")
+        for name, view in pool.views.items():
+            print(f"[serve]   {name}: quota={view.quota} used={view.used}")
+        print(f"[serve] HBM: "
+              f"{unique_tree_bytes([e.params for e in u.engines.values()]) / 1e6:.1f}"
+              f" MB weights (de-duplicated), {pool.hbm_bytes() / 1e6:.0f} MB "
+              f"pool arena")
     print(f"[serve] jit traces by step: {dict(TRACE_COUNTS)} "
           f"(bounded by the shape buckets — DESIGN.md §5)")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report.to_json(), f, indent=1)
+        print(f"[serve] report JSON → {args.report}")
     return 0
 
 

@@ -1,0 +1,561 @@
+"""Closed-loop SLO-attainment serving driver over REAL engines.
+
+This is the layer that lets the runtime be measured the way the paper
+measures MuxServe — goodput and SLO attainment under bursty,
+popularity-skewed arrivals — instead of raw tokens/s on a hand-rolled
+request list.  It closes three loops at once:
+
+  * **workload → runtime**: the same ``core/workload.py`` generator
+    that feeds the discrete-event simulator produces the arrival trace
+    (Poisson per LLM, power-law rates, ShareGPT-shaped lengths), so
+    runtime SLO numbers are directly comparable to simulator
+    predictions for the same trace;
+  * **placement → runtime**: a ``core/placement.py`` plan (or its JSON
+    serialization) instantiates real colocated units —
+    ``units_from_placement`` builds one ``MuxScheduler`` per mesh with
+    quota split ∝ arrival rate, fused where same-architecture — so the
+    optimizer's output actually runs;
+  * **runtime → SLO report**: per-request TTFT/TPOT/E2E timelines
+    (``Request`` timestamps) roll up into per-LLM and aggregate
+    p50/p99, goodput and SLO attainment at configurable scale factors
+    (DESIGN.md §9 defines the conventions, shared with the simulator).
+
+Two time domains, one code path:
+
+  * **realtime** — a wall clock rebased to serving start; SLO
+    references are calibrated per engine by timing solo probe requests
+    (``calibrate_slo_refs``).  This is live serving
+    (``launch/serve.py``).
+  * **deterministic** — a logical clock the loop itself advances by a
+    per-tick cost (``TickCostModel``: base dispatch cost + per-token
+    prefill/decode costs).  Engines still run their real jitted
+    compute and produce real tokens; only *time* is modeled, so the
+    measured scheduling behavior (queueing, convoys, quota pressure)
+    is exact and reproducible across machines.  Tests and the CI
+    benchmark (``benchmarks/slo_attainment.py``) run this mode.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.config import BLOCK_TOKENS, replace
+from repro.core.placement import Placement
+from repro.core.workload import Workload
+from repro.models.transformer import init_params
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import UnifiedKVPool
+from repro.serving.mux import MuxScheduler
+
+# same default ladder as core/simulator.simulate — keep in sync, the
+# reports are meant to be compared side by side
+DEFAULT_SLO_SCALES: Tuple[float, ...] = (2.0, 4.0, 6.0, 8.0, 12.0, 16.0)
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+class WallClock:
+    """Wall time rebased to construction, so every ``Request``
+    timestamp and trace arrival shares one origin (t=0 = serving
+    start)."""
+
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def __call__(self) -> float:
+        return time.perf_counter() - self.t0
+
+
+class LogicalClock:
+    """Deterministic clock advanced explicitly by the serving loop."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0
+        self.t += dt
+
+
+@dataclass(frozen=True)
+class TickCostModel:
+    """Logical seconds one scheduler tick costs in deterministic mode.
+
+    ``dt = base + prefill_tokens·prefill_tok + decode_tokens·decode_tok``
+
+    ``base`` is the per-tick dispatch cost (paid even by an idle
+    policy branch — an fcfs tick that serves nothing is cheap but not
+    free), the per-token terms are the compute cost.  The same
+    constants define the solo SLO reference, so attainment is
+    self-consistent: a request's reference is what IT would take on an
+    otherwise idle unit under this very cost model.
+    """
+    base: float = 4e-3
+    prefill_tok: float = 2e-4
+    decode_tok: float = 2e-3
+
+    def dt(self, prefill_tokens: int, decode_tokens: int) -> float:
+        return (self.base + prefill_tokens * self.prefill_tok
+                + decode_tokens * self.decode_tok)
+
+    def solo_reference(self, prompt_len: int, output_len: int,
+                       chunk_tokens: Optional[int] = None) -> float:
+        """Ideal single-request E2E on an idle unit: prefill runs as
+        one tick (or ceil(prompt/chunk) chunk ticks) and every further
+        output token as one decode tick.  The first output token is
+        committed by the prefill tick itself and billed in neither
+        phase's token count — mirroring exactly how the serving loop
+        meters ``MuxStats`` tokens, so the reference is what the
+        request would cost under this very clock."""
+        n_prefill_ticks = (1 if not chunk_tokens
+                           else -(-prompt_len // chunk_tokens))
+        n_decode_ticks = max(output_len - 1, 0)   # first token ∈ prefill
+        return ((n_prefill_ticks + n_decode_ticks) * self.base
+                + prompt_len * self.prefill_tok
+                + n_decode_ticks * self.decode_tok)
+
+
+# ---------------------------------------------------------------------------
+# SLO references (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SLORef:
+    """Per-model ideal-latency model: the runtime analogue of the
+    simulator's ``_slo_reference_latency`` (single-job, dedicated
+    hardware).  A request is SLO-attained at scale s iff
+    ``E2E ≤ s × reference(prompt_len, output_len)``."""
+    prefill_per_token: float
+    decode_per_token: float
+    base: float = 0.0
+
+    def reference(self, prompt_len: int, output_len: int) -> float:
+        return (self.base + prompt_len * self.prefill_per_token
+                + output_len * self.decode_per_token)
+
+
+def calibrate_slo_refs(engines: Dict[str, Engine], probe_prompt: int = 16,
+                       probe_decode: int = 6, seed: int = 1234
+                       ) -> Dict[str, SLORef]:
+    """Measure each engine's solo per-token costs (realtime mode).
+
+    Runs one warm-up probe (compiles the shape buckets) and one
+    measured probe per engine — a single request on the otherwise-idle
+    engine, which is exactly the paper's 'single device execution
+    latency' reference, profiled instead of cost-modeled.  Probes
+    finish and free their cache, so pool state is untouched; the probe
+    doubles as jit warm-up for serving.
+    """
+    rng = np.random.default_rng(seed)
+    refs: Dict[str, SLORef] = {}
+    for name, eng in engines.items():
+        for attempt in range(2):                  # warm-up, then measure
+            req = Request(-1, name,
+                          list(rng.integers(1, eng.cfg.vocab_size,
+                                            probe_prompt)),
+                          probe_decode + 1)
+            t0 = time.perf_counter()
+            eng.prefill([req])
+            while eng.has_prefill_work():         # chunked engines
+                eng.prefill([])
+            t_prefill = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            while not req.done and eng.has_decode_work():
+                eng.decode()
+            t_decode = time.perf_counter() - t0
+            eng.finished.clear()
+        refs[name] = SLORef(
+            prefill_per_token=t_prefill / probe_prompt,
+            decode_per_token=t_decode / max(probe_decode, 1))
+    return refs
+
+
+def tick_cost_refs(engines: Dict[str, Engine], cost: TickCostModel
+                   ) -> Callable[[str, int, int], float]:
+    """Deterministic-mode reference: analytic solo latency under the
+    SAME cost model the clock uses (per-engine chunk window applied)."""
+    chunk = {name: eng.chunk_tokens for name, eng in engines.items()}
+
+    def ref(model: str, prompt_len: int, output_len: int) -> float:
+        return cost.solo_reference(prompt_len, output_len, chunk[model])
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# workload → runtime requests
+# ---------------------------------------------------------------------------
+def requests_from_workload(wl: Workload, engines: Dict[str, Engine],
+                           seed: int = 0, max_new_cap: int = 0
+                           ) -> List[Request]:
+    """Materialize a ``core/workload.py`` trace as engine requests.
+
+    Length specs are clipped to each engine's sequence envelope
+    (``max_blocks × BLOCK_TOKENS`` tokens for prompt + output + the
+    reserved next-token slot); ``max_new_cap`` optionally caps output
+    lengths (CPU-scale runs).  Token ids are drawn uniformly from the
+    target model's vocab — content is irrelevant to scheduling, only
+    lengths and arrivals matter.
+    """
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for rid, spec in enumerate(r for r in wl.requests
+                               if r.model in engines):
+        eng = engines[spec.model]
+        envelope = eng.max_blocks * BLOCK_TOKENS
+        out_len = max(1, min(spec.output_len,
+                             max_new_cap or spec.output_len,
+                             envelope // 2))
+        plen = max(1, min(spec.prompt_len, envelope - out_len - 1))
+        prompt = list(rng.integers(1, eng.cfg.vocab_size, plen))
+        reqs.append(Request(rid, spec.model, prompt, out_len,
+                            arrival=spec.arrival))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# placement → runtime bridge
+# ---------------------------------------------------------------------------
+def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
+                          pool_blocks: int = 200_000, max_slots: int = 4,
+                          chunk_tokens: int = 0, seed: int = 0,
+                          policy: str = "adbs", fused: bool = False,
+                          reduced: bool = True) -> MuxScheduler:
+    """Instantiate one real colocated unit from ``(name, arch, rate)``
+    triples: one engine per spec over a shared ``UnifiedKVPool``, with
+    the initial head-block quota split ∝ arrival rate — the same
+    popularity-proportional initial grant the simulator uses
+    (``UnitSim.__init__``); ADBS adapts it from there.
+    """
+    assert specs, "a unit needs at least one (name, arch, rate) spec"
+    pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32)
+    rate_sum = sum(max(r, 0.0) for _, _, r in specs)
+    min_quota = max(pool_blocks // (8 * len(specs)), 1)
+    engines: Dict[str, Engine] = {}
+    for i, (name, arch, rate) in enumerate(specs):
+        cfg = configs.get_reduced(arch) if reduced else configs.get(arch)
+        cfg = replace(cfg, name=name)
+        params = init_params(jax.random.PRNGKey(seed + i), cfg, jnp.float32)
+        if policy == "fcfs":
+            # the temporal baseline has no quotas (paper Fig. 9; the
+            # simulator grants fcfs views the full capacity too) — the
+            # arena's free-block count is the only admission bound
+            quota = pool_blocks
+        else:
+            # all-zero rates degrade to an equal split
+            share = (max(rate, 0.0) / rate_sum) if rate_sum \
+                else 1 / len(specs)
+            quota = max(int(pool_blocks * share), min_quota)
+        view = pool.register_model(cfg, quota)
+        engines[name] = Engine(cfg, params, view, max_slots=max_slots,
+                               chunk_tokens=chunk_tokens or None)
+    return MuxScheduler(engines, pool, policy=policy, fused=fused)
+
+
+def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
+                         max_slots: int = 4, chunk_tokens: int = 0,
+                         seed: int = 0, policy: str = "adbs",
+                         fused: bool = False) -> List[MuxScheduler]:
+    """The placement → runtime bridge: one real unit per non-empty mesh
+    of an optimizer plan (group membership = the mesh's LLM set, fused
+    where architectures match), REDUCED model variants so the plan runs
+    at CPU scale.  Pool blocks are split across meshes ∝ mesh size —
+    the runtime stand-in for per-mesh HBM."""
+    total_dev = sum(m.n_devices for m in pl.meshes if m.specs) or 1
+    units: List[MuxScheduler] = []
+    for m in pl.meshes:
+        if not m.specs:
+            continue
+        blocks = max(int(pool_blocks * m.n_devices / total_dev), 4096)
+        unit_specs = [(s.name, s.arch_id, s.rate) for s in m.specs]
+        units.append(build_unit_from_specs(
+            unit_specs, pool_blocks=blocks, max_slots=max_slots,
+            chunk_tokens=chunk_tokens, seed=seed + m.mesh_id,
+            policy=policy, fused=fused))
+    assert units, "placement has no populated mesh"
+    return units
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+@dataclass
+class LatencyStats:
+    p50: float = float("nan")
+    p99: float = float("nan")
+    mean: float = float("nan")
+
+    @classmethod
+    def of(cls, xs: List[float]) -> "LatencyStats":
+        if not xs:
+            return cls()
+        a = np.asarray(xs, np.float64)
+        return cls(float(np.percentile(a, 50)), float(np.percentile(a, 99)),
+                   float(a.mean()))
+
+    def to_json(self) -> dict:
+        return {"p50": self.p50, "p99": self.p99, "mean": self.mean}
+
+
+@dataclass
+class LLMReport:
+    """SLO accounting for one LLM (or the aggregate): latency
+    percentiles over finished requests, attainment and goodput per SLO
+    scale over ALL submitted requests (an unfinished request is a
+    miss at every scale — dropping it would flatter the tail)."""
+    name: str
+    submitted: int
+    finished: int
+    throughput: float                        # finished req/s
+    ttft: LatencyStats
+    tpot: LatencyStats
+    e2e: LatencyStats
+    attainment: Dict[float, float] = field(default_factory=dict)
+    goodput: Dict[float, float] = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "submitted": self.submitted,
+                "finished": self.finished, "throughput": self.throughput,
+                "ttft": self.ttft.to_json(), "tpot": self.tpot.to_json(),
+                "e2e": self.e2e.to_json(),
+                "attainment": {str(k): v for k, v in self.attainment.items()},
+                "goodput": {str(k): v for k, v in self.goodput.items()}}
+
+
+@dataclass
+class ServeReport:
+    horizon: float                           # clock time at last finish
+    wall_s: float                            # real wall time (diagnostic)
+    ticks: int
+    deterministic: bool
+    slo_scales: Tuple[float, ...]
+    per_llm: Dict[str, LLMReport]
+    aggregate: LLMReport
+
+    def summary(self) -> str:
+        a = self.aggregate
+        att = ", ".join(f"{s:g}×:{a.attainment[s]:.0%}"
+                        for s in self.slo_scales)
+        lines = [f"aggregate: {a.finished}/{a.submitted} finished in "
+                 f"{self.horizon:.2f}s ({'logical' if self.deterministic else 'wall'}) "
+                 f"→ {a.throughput:.2f} req/s | SLO[{att}]",
+                 f"aggregate: TTFT p50={a.ttft.p50:.3f}s "
+                 f"p99={a.ttft.p99:.3f}s | TPOT p50={a.tpot.p50 * 1e3:.1f}ms "
+                 f"p99={a.tpot.p99 * 1e3:.1f}ms | E2E p50={a.e2e.p50:.2f}s "
+                 f"p99={a.e2e.p99:.2f}s"]
+        for name, r in self.per_llm.items():
+            att = ", ".join(f"{s:g}×:{r.attainment[s]:.0%}"
+                            for s in self.slo_scales)
+            lines.append(f"{name}: {r.finished}/{r.submitted} "
+                         f"ttft_p99={r.ttft.p99:.3f}s "
+                         f"tpot_p99={r.tpot.p99 * 1e3:.1f}ms "
+                         f"e2e_p99={r.e2e.p99:.2f}s | SLO[{att}]")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {"horizon": self.horizon, "wall_s": self.wall_s,
+                "ticks": self.ticks, "deterministic": self.deterministic,
+                "slo_scales": list(self.slo_scales),
+                "aggregate": self.aggregate.to_json(),
+                "per_llm": {k: v.to_json() for k, v in self.per_llm.items()}}
+
+
+def _roll_up(name: str, reqs: List[Request], horizon: float,
+             scales: Sequence[float],
+             ref: Callable[[str, int, int], float]) -> LLMReport:
+    fin = [r for r in reqs if r.finish >= 0]
+    ttfts = [r.first_token - r.arrival for r in fin]
+    tpots = [(r.finish - r.first_token) / max(len(r.output) - 1, 1)
+             for r in fin]
+    e2es = [r.finish - r.arrival for r in fin]
+    att: Dict[float, float] = {}
+    goodput: Dict[float, float] = {}
+    for s in scales:
+        ok = sum(1 for r in fin
+                 if (r.finish - r.arrival)
+                 <= s * ref(r.model, len(r.prompt), r.max_new_tokens))
+        att[s] = ok / max(len(reqs), 1)
+        goodput[s] = ok / max(horizon, 1e-9)
+    return LLMReport(name=name, submitted=len(reqs), finished=len(fin),
+                     throughput=len(fin) / max(horizon, 1e-9),
+                     ttft=LatencyStats.of(ttfts), tpot=LatencyStats.of(tpots),
+                     e2e=LatencyStats.of(e2es), attainment=att,
+                     goodput=goodput)
+
+
+# ---------------------------------------------------------------------------
+# the serving loop
+# ---------------------------------------------------------------------------
+def _warmup_drain(units: Sequence[MuxScheduler],
+                  owner: Dict[str, MuxScheduler],
+                  requests: List[Request], max_ticks: int = 50_000) -> None:
+    """Compile the shape buckets live serving will hit BEFORE the wall
+    clock starts (DESIGN.md §5 defines the bucket set, §9 why warm-up
+    matters for wall-clock SLO numbers).
+
+    Two passes: (1) per engine, one solo drain per (row-bucket ×
+    prompt-bucket) combination present in the trace — the serial
+    prefill/decode programs a trickle of arrivals will request; (2) a
+    flat-out replay of the trace through the schedulers, which
+    compiles the fused sweeps (fixed group rows) and exercises the
+    multi-engine paths.  Warm-up uses the same engines serving will
+    use, so the programs land in the shared ``jitted_step`` cache."""
+    rng = np.random.default_rng(0)
+    by_model: Dict[str, List[Request]] = {}
+    for r in requests:
+        by_model.setdefault(r.model, []).append(r)
+    for u in units:
+        for name, eng in u.engines.items():
+            plens = sorted({-(-len(r.prompt) // BLOCK_TOKENS) * BLOCK_TOKENS
+                            for r in by_model.get(name, [])})
+            if not plens:
+                continue
+            # SSM decode keeps exact rows (no pow2 bucket) — warm every
+            # batch size; attention rows only the pow2 buckets
+            rows = (range(1, eng.max_slots + 1) if eng.cfg.ssm else
+                    sorted({1 << k for k in range((eng.max_slots - 1)
+                                                  .bit_length() + 1)
+                            if 1 << k <= eng.max_slots} | {1}))
+            for b in rows:
+                for plen in plens:
+                    probe = [Request(-1, name,
+                                     list(rng.integers(
+                                         1, eng.cfg.vocab_size, plen)), 2)
+                             for _ in range(b)]
+                    eng.prefill(probe)
+                    while eng.has_prefill_work():
+                        eng.prefill([])
+                    while eng.has_decode_work():
+                        eng.decode()
+                    eng.finished.clear()
+    warm = [Request(-1 - i, r.model, r.prompt, r.max_new_tokens)
+            for i, r in enumerate(requests)]
+    for r in warm:
+        owner[r.model].submit(r)
+    t = 0
+    while any(u.pending() for u in units) and t < max_ticks:
+        for u in units:
+            if u.pending():
+                u.tick()
+        t += 1
+    for u in units:
+        u.stats.finished.clear()
+
+
+def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
+                   slo_scales: Sequence[float] = DEFAULT_SLO_SCALES,
+                   cost: Optional[TickCostModel] = None,
+                   refs: Optional[Dict[str, SLORef]] = None,
+                   warm: bool = True,
+                   max_ticks: int = 500_000) -> ServeReport:
+    """Drive real units through an arrival-ordered request list and
+    roll the ``Request`` timelines up into a ``ServeReport``.
+
+    ``cost`` set → deterministic mode: a ``LogicalClock`` advances by
+    the max per-unit tick cost each iteration (units are parallel
+    hardware; the slowest unit's tick bounds the round) and SLO
+    references are analytic under the same constants.  ``cost`` unset
+    → realtime: wall clock, per-engine calibrated references (``refs``
+    overrides calibration), and — unless ``warm=False`` — a warm-up
+    replay of the trace so jit compilation lands outside the measured
+    window (steady-state serving, not cold start).
+
+    CAVEAT (realtime + multiple units): units are ticked sequentially
+    on one host thread under ONE wall clock, so each mesh's latencies
+    absorb the other meshes' compute — realtime numbers understate a
+    multi-mesh placement.  Use deterministic mode to compare
+    placements with different mesh counts; it models units as
+    parallel.
+    """
+    owner: Dict[str, MuxScheduler] = {}
+    engines: Dict[str, Engine] = {}
+    for u in units:
+        for name, eng in u.engines.items():
+            assert name not in owner, f"duplicate model {name} across units"
+            owner[name] = u
+            engines[name] = eng
+
+    deterministic = cost is not None
+    if deterministic:
+        clock: Callable[[], float] = LogicalClock()
+        ref_fn = tick_cost_refs(engines, cost)
+    else:
+        if warm:
+            _warmup_drain(units, owner, requests)
+        slo = refs if refs is not None else calibrate_slo_refs(engines)
+        def ref_fn(model, plen, olen, _slo=slo):
+            return _slo[model].reference(plen, olen)
+        clock = WallClock()
+    for u in units:
+        u.clock = clock
+        for eng in u.engines.values():
+            eng.clock = clock
+
+    requests = sorted(requests, key=lambda r: r.arrival)
+    idx, ticks = 0, 0
+    wall0 = time.perf_counter()
+    while idx < len(requests) or any(u.pending() for u in units):
+        now = clock()
+        while idx < len(requests) and requests[idx].arrival <= now:
+            r = requests[idx]
+            owner[r.model].submit(r)
+            idx += 1
+        busy = [u for u in units if u.pending()]
+        if busy:
+            dt = 0.0
+            for u in busy:
+                p0, d0 = u.stats.prefill_tokens, u.stats.decode_tokens
+                u.tick()
+                if deterministic:
+                    dt = max(dt, cost.dt(u.stats.prefill_tokens - p0,
+                                         u.stats.decode_tokens - d0))
+            if deterministic:
+                clock.advance(dt)
+            ticks += 1
+            if ticks >= max_ticks:
+                break
+        elif idx < len(requests):
+            # idle until the next arrival
+            gap = requests[idx].arrival - now
+            if deterministic:
+                clock.advance(max(gap, 0.0))
+            else:
+                time.sleep(min(max(gap, 0.0), 0.005))
+    wall_s = time.perf_counter() - wall0
+
+    horizon = max([clock()] + [r.finish for r in requests if r.finish >= 0])
+    by_model: Dict[str, List[Request]] = {n: [] for n in engines}
+    for r in requests:
+        by_model[r.model].append(r)
+    scales = tuple(slo_scales)
+    per_llm = {n: _roll_up(n, rs, horizon, scales, ref_fn)
+               for n, rs in by_model.items()}
+    agg = _roll_up("aggregate", requests, horizon, scales, ref_fn)
+    return ServeReport(horizon=horizon, wall_s=wall_s, ticks=ticks,
+                       deterministic=deterministic, slo_scales=scales,
+                       per_llm=per_llm, aggregate=agg)
+
+
+def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
+                   seed: int = 0, max_new_cap: int = 0,
+                   slo_scales: Sequence[float] = DEFAULT_SLO_SCALES,
+                   cost: Optional[TickCostModel] = None,
+                   refs: Optional[Dict[str, SLORef]] = None,
+                   max_ticks: int = 500_000) -> ServeReport:
+    """``serve_requests`` over a ``core/workload.py`` trace (the shared
+    simulator/runtime arrival process)."""
+    engines: Dict[str, Engine] = {}
+    for u in units:
+        engines.update(u.engines)
+    reqs = requests_from_workload(wl, engines, seed=seed,
+                                  max_new_cap=max_new_cap)
+    return serve_requests(units, reqs, slo_scales=slo_scales, cost=cost,
+                          refs=refs, max_ticks=max_ticks)

@@ -54,6 +54,23 @@ from repro.serving.kvcache import ModelCacheView, UnifiedKVPool
 
 @dataclass
 class Request:
+    """One serving request, carrying its whole latency timeline.
+
+    Timestamps are stamped by the engine/scheduler from the owning
+    scheduler's clock (``MuxScheduler(clock=...)``), so they live in a
+    single time domain — wall seconds for live serving, logical
+    seconds under a deterministic clock (serving/driver.py):
+
+      * ``arrival``      — trace arrival time (set by the submitter;
+        queueing delay before admission counts toward TTFT/E2E, as in
+        the paper's latency accounting);
+      * ``prefill_done`` — prefill job dispatched (admission time);
+      * ``first_token``  — first output token committed (TTFT end);
+      * ``finish``       — last token committed (E2E end).
+
+    DESIGN.md §9 defines the derived metrics (TTFT/TPOT/E2E) and the
+    SLO-attainment convention shared with ``core/simulator.py``.
+    """
     req_id: int
     model: str
     prompt: List[int]
@@ -62,6 +79,7 @@ class Request:
     # runtime state
     output: List[int] = field(default_factory=list)
     prefill_done: float = -1.0
+    first_token: float = -1.0
     finish: float = -1.0
 
     @property
@@ -194,7 +212,8 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, view: ModelCacheView,
                  max_slots: int = 8, max_blocks_per_seq: int = 64,
-                 rng_seed: int = 0, chunk_tokens: Optional[int] = None):
+                 rng_seed: int = 0, chunk_tokens: Optional[int] = None,
+                 clock=time.perf_counter):
         """``chunk_tokens``: enable CHUNKED PREFILL (beyond-paper —
         Sarathi-style): prompts are processed ``chunk_tokens`` at a
         time, one chunk per scheduler tick, so colocated LLMs' decode
@@ -203,6 +222,10 @@ class Engine:
         Attention families only (SSM state chunking is a natural
         extension — the mixer already carries state)."""
         self.cfg = cfg
+        # request timestamps (first_token/finish) are stamped from this
+        # clock so a deterministic driver can own the time domain
+        # (serving/driver.py); MuxScheduler re-points it on all engines
+        self.clock = clock
         # jit programs are cached per *geometry*, not per model name —
         # colocated instances of the same architecture share programs
         self.cfg_key = replace(cfg, name="")
@@ -358,6 +381,7 @@ class Engine:
             # position once blocks free up — never a silent desync
             if self.view.append_tokens(seq_ids[i], 1):
                 r.output.append(int(nxt[i]))
+                r.first_token = self.clock()
         return int(lens.sum())
 
     # ------------------------------------------------------------------
@@ -426,6 +450,7 @@ class Engine:
                 # the unchunked path (decode retries on overcommit)
                 if self.view.append_tokens(r._seq_id, 1):
                     r.output.append(int(nxt[i]))
+                    r.first_token = self.clock()
         return done_tokens
 
     def run_chunk_job(self, job: PrefillJob) -> int:
@@ -503,7 +528,11 @@ class Engine:
             r.output.append(int(nxt[i]))
             done_tokens += 1
             if r.done:
-                r.finish = time.perf_counter()
+                if r.first_token < 0:
+                    # prefill's first token rolled back on overcommit
+                    # and decode regenerated it — TTFT ends here
+                    r.first_token = self.clock()
+                r.finish = self.clock()
                 self.view.free_seq(job.seq_ids[i])
                 slot = job.slots[i]
                 self.slots[slot] = None
@@ -511,6 +540,8 @@ class Engine:
                 self.finished.append(r)
             else:
                 ok = self.view.append_tokens(job.seq_ids[i], 1)
+                if ok and r.first_token < 0:
+                    r.first_token = self.clock()
                 if not ok:
                     # quota overcommit (admitted sequences' future
                     # growth is not reserved, and adapt_quotas may
@@ -557,6 +588,7 @@ class Engine:
         self.slot_seq[slot] = -1
         r.output.clear()
         r.prefill_done = -1.0
+        r.first_token = -1.0
         self.preempted.append(r)
 
     def decode(self, job: Optional[DecodeJob] = None) -> int:

@@ -176,9 +176,24 @@ FusedDecodeGroup = FusedGroup
 
 
 class MuxScheduler:
+    """Paper Alg. 3 (ADBS) over real engines.
+
+    Simulator counterpart: ``core/simulator.UnitSim`` runs the same
+    policy branches against cost-model latencies — each branch below
+    names the Alg. 3 step it implements so sim/runtime divergence is
+    auditable (the sim's version lives in
+    ``UnitSim._round_spatial_temporal``).
+
+    ``clock``: zero-argument callable supplying the current time for
+    request timestamps (``Request.first_token`` / ``finish`` /
+    ``prefill_done``).  Defaults to wall time; a deterministic driver
+    (``serving/driver.py``) passes a logical clock it advances itself,
+    which makes SLO accounting reproducible across machines.
+    """
+
     def __init__(self, engines: Dict[str, Engine], pool: UnifiedKVPool,
                  policy: str = "adbs", adapt_every: int = 16,
-                 fused: bool = False):
+                 fused: bool = False, clock=None):
         self.engines = engines
         self.pool = pool
         self.policy = policy
@@ -189,7 +204,11 @@ class MuxScheduler:
         self._prefill_rr = 0
         self._decode_rr = 0
         self.stats = MuxStats()
-        self.clock = 0.0  # logical time (ticks); callers may use wall time
+        # one time domain for every timestamp: the scheduler's clock is
+        # pushed onto all engines so Request timelines are coherent
+        self.clock = clock if clock is not None else time.perf_counter
+        for eng in engines.values():
+            eng.clock = self.clock
         # fused multi-LLM tick (DESIGN.md §2): group colocated engines
         # by fusion signature; members adopt ONE stacked weight tree
         # per group (zero-copy) for the lifetime of the scheduler, and
@@ -239,8 +258,11 @@ class MuxScheduler:
 
     # ------------------------------------------------------------------
     def _pull_batch(self, name: str) -> List[Request]:
-        """Pop an admissible batch for one LLM (ADBS admission: whole-
-        lifetime quota check, cumulative across the batch)."""
+        """Pop an admissible batch for one LLM — Alg. 3's
+        ``resource_enough`` gate (Eq. 2's per-LLM cache share R):
+        whole-lifetime quota check, cumulative across the batch.
+        Simulator counterpart: ``UnitSim._try_prefill_batch`` (same
+        lifetime reservation, in bytes instead of head-blocks)."""
         q = self.queues[name]
         eng = self.engines[name]
         if q and eng.lifetime_blocks(q[0]) > eng.view.quota:
@@ -261,8 +283,12 @@ class MuxScheduler:
 
     def _run_prefill_round_robin(self) -> bool:
         """Try one prefill job round-robin across the serially-prefilled
-        LLMs (ADBS main loop).  Fused-prefill group members are handled
-        by ``_run_prefill_fused_groups`` instead."""
+        LLMs — Alg. 3's prefill-selection step (prefill jobs are
+        prioritized; round-robin order across LLMs is the fairness
+        rule).  Fused-prefill group members are handled by
+        ``_run_prefill_fused_groups`` instead.  Simulator counterpart:
+        the round-robin prefill loop in
+        ``UnitSim._round_spatial_temporal``."""
         names = self._prefill_serial_names
         n = len(names)
         for i in range(n):
@@ -272,7 +298,7 @@ class MuxScheduler:
             if batch or eng.has_prefill_work():
                 toks = eng.prefill(batch)
                 for r in batch:
-                    r.prefill_done = time.perf_counter()
+                    r.prefill_done = self.clock()
                 self.stats.prefill_tokens += toks
                 self._prefill_rr = (self._prefill_rr + i + 1) % n
                 return True
@@ -287,7 +313,7 @@ class MuxScheduler:
         for grp in self.fused_groups:
             if grp.chunk_tokens is None:
                 continue
-            now = time.perf_counter()
+            now = self.clock()
             for name, eng in zip(grp.names, grp.engines):
                 batch = self._pull_batch(name)
                 if batch:
@@ -315,7 +341,11 @@ class MuxScheduler:
         return self._run_prefill_round_robin() or ran
 
     def _run_decode_round_robin(self) -> int:
-        """Fill the tick with decode jobs from every LLM (colocation)."""
+        """Fill the tick with decode jobs from every LLM — Alg. 3's
+        decode-fill step ("remaining resources go to decode jobs"),
+        i.e. decode-decode colocation.  Simulator counterpart: the
+        concurrent-decode block of ``UnitSim._round_spatial_temporal``
+        (``t_round = Σ t_p + max_m t_d^m``, Eq. 3's round shape)."""
         total = 0
         n = len(self._names)
         for i in range(n):
@@ -369,7 +399,23 @@ class MuxScheduler:
 
     # ------------------------------------------------------------------
     def tick(self) -> None:
-        """One scheduler iteration (paper Alg. 3 main loop)."""
+        """One scheduler iteration (paper Alg. 3 main loop).
+
+        Branch ↔ paper mapping (sim counterpart in parentheses — both
+        must stay in step, tests/test_slo_driver.py compares them on
+        shared conventions):
+
+        * ``adbs`` — Alg. 3 verbatim: prefill-priority round-robin
+          selection, decode fills the remaining resources, and
+          ``adapt_quota_periodically`` every ``adapt_every`` ticks
+          (``UnitSim._round_spatial_temporal`` + ``_adapt_quotas``).
+        * ``round_robin`` — Fig. 9 ablation arm: the same loop without
+          prefill priority (prefill only every other tick) and with
+          FIXED quotas — isolates what ADBS's two mechanisms add.
+        * ``fcfs`` — temporal-multiplexing baseline (AlpaServe-style):
+          strict global arrival order, one LLM at a time, no quotas
+          (``UnitSim._round_temporal``).
+        """
         self.stats.ticks += 1
         if self.policy == "adbs":
             self._run_prefill()
@@ -377,6 +423,8 @@ class MuxScheduler:
             # multi-LLM sweep when fused=True, back-to-back otherwise
             self.stats.decode_tokens += self._decode_tick()
             if self.stats.ticks % self.adapt_every == 0:
+                # Alg. 3's adapt_quota_periodically (sim counterpart:
+                # UnitSim._adapt_quotas, same low→high utilization move)
                 self.pool.adapt_quotas()
         elif self.policy == "round_robin":
             # no prefill priority, no quota adaptation
@@ -385,23 +433,41 @@ class MuxScheduler:
             self.stats.decode_tokens += self._decode_tick()
         elif self.policy == "fcfs":
             # temporal multiplexing: serve the LLM with the oldest
-            # pending request, prefill+decode to completion batch-wise
+            # pending request, prefill+decode to completion batch-wise.
+            # In-flight prompt chunks must keep advancing regardless of
+            # admission — a chunked prefill that only moved when a NEW
+            # batch was admissible would stall forever once slots or
+            # quota block the queue head (the unit is busy until the
+            # current batch completes; new admissions wait).
+            prefilling = [n for n, e in self.engines.items()
+                          if e.has_prefill_work()]
+            for name in prefilling:
+                self.stats.prefill_tokens += self.engines[name].prefill([])
+            active = [n for n, e in self.engines.items()
+                      if e.has_decode_work()]
             oldest_name, oldest_t = None, float("inf")
             for name, q in self.queues.items():
                 if q and q[0].arrival < oldest_t:
                     oldest_name, oldest_t = name, q[0].arrival
-            active = [n for n, e in self.engines.items()
-                      if e.has_decode_work()]
-            if oldest_name is not None and not active:
+            if oldest_name is not None and not active and not prefilling:
                 eng = self.engines[oldest_name]
+                q = self.queues[oldest_name]
+                if q and eng.lifetime_blocks(q[0]) > eng.view.quota:
+                    # same escape as _pull_batch: a head request whose
+                    # lifetime exceeds the LLM's quota would re-queue
+                    # forever (fcfs has no adaptation to fix it)
+                    self.pool.grant_min_quota(eng.view,
+                                              eng.lifetime_blocks(q[0]))
                 batch = []
                 pending = 0
-                q = self.queues[oldest_name]
                 while q and len(batch) < len(eng.free_slots()) \
                         and eng.can_admit(q[0], pending):
                     pending += eng.lifetime_blocks(q[0])
                     batch.append(q.popleft())
                 if batch:
+                    now = self.clock()
+                    for r in batch:
+                        r.prefill_done = now
                     self.stats.prefill_tokens += eng.prefill(batch)
             for name in active:
                 self.stats.decode_tokens += self.engines[name].decode()

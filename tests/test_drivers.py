@@ -36,6 +36,30 @@ def test_serve_driver_cli():
               "--rate", "1.0", "--horizon", "2", "--max-new", "3"])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "finished" in r.stdout
+    assert "SLO[" in r.stdout          # attainment report is part of CLI
+
+
+def test_serve_driver_cli_placement_bridge(tmp_path):
+    """launch/serve.py --placement runs a unit built from a
+    core/placement.py plan end-to-end (the acceptance path)."""
+    plan = {
+        "total_tpt": 2.0,
+        "meshes": [{"mesh_id": 0, "n_devices": 2, "specs": [
+            {"name": "qwen2-7b#0", "arch": "qwen2-7b", "rate": 1.5,
+             "tp": 2, "sm_frac": 0.5, "mean_prompt": 16, "mean_output": 4},
+            {"name": "qwen2-7b#1", "arch": "qwen2-7b", "rate": 0.5,
+             "tp": 2, "sm_frac": 0.5, "mean_prompt": 16, "mean_output": 4},
+        ]}],
+    }
+    path = tmp_path / "plan.json"
+    path.write_text(__import__("json").dumps(plan))
+    r = _run(["-m", "repro.launch.serve", "--placement", str(path),
+              "--policy", "adbs", "--fused", "--chunk-tokens", "16",
+              "--horizon", "2", "--deterministic", "--mean-output", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "placement plan" in r.stdout
+    assert "fused group (2 engines)" in r.stdout
+    assert "SLO[" in r.stdout
 
 
 def test_engine_pool_matches_pallas_kernel():

@@ -1,0 +1,123 @@
+"""Docs reference checker (CI gate).
+
+Scans the prose docs (README.md, DESIGN.md, docs/*.md) and fails on:
+
+  * broken intra-repo markdown links — ``[text](path)`` whose target
+    does not exist (http/mailto/#anchor and ``../`` escapes are
+    skipped);
+  * backticked path references (``core/simulator.py``,
+    ``benchmarks/fused_tick``, ``kernels/flash_prefill.fused_...``)
+    that resolve to no file at the repo root or under ``src/repro/``;
+  * backticked dotted module references (``repro.launch.serve``) with
+    no matching module under ``src/``;
+  * ``python -m <module>`` invocations in fenced code blocks whose
+    module cannot be found.
+
+Docs rot silently — a rename like FusedDecodeGroup → FusedGroup (PR 2)
+leaves stale pointers everywhere unless something fails loudly.  Run:
+
+  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md",
+             *sorted(str(p.relative_to(ROOT))
+                     for p in (ROOT / "docs").glob("**/*.md"))] \
+    if (ROOT / "docs").is_dir() else ["README.md", "DESIGN.md", "ROADMAP.md"]
+
+_FENCE = re.compile(r"```.*?```", re.S)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_INLINE = re.compile(r"`([^`\n]+)`")
+_DOTTED = re.compile(r"^repro(\.\w+)+$")
+_PATHY = re.compile(r"^[\w./-]+$")
+_PY_M = re.compile(r"python(?:3)?\s+-m\s+([\w.]+)")
+
+
+def _module_exists(dotted: str) -> bool:
+    """repro.a.b → src/repro/a/b.py (or package); benchmarks.x,
+    tools.x → repo-root packages.  A trailing unresolvable component
+    is retried as an attribute of its parent module."""
+    parts = dotted.split(".")
+    roots = [ROOT / "src", ROOT]
+    for root in roots:
+        for n in (len(parts), len(parts) - 1):     # maybe last = attr
+            if n < 1:
+                continue
+            p = root.joinpath(*parts[:n])
+            if p.with_suffix(".py").is_file() or \
+                    (p.is_dir() and (p / "__init__.py").is_file()):
+                return True
+    return False
+
+
+def _path_exists(token: str) -> bool:
+    """core/simulator.py, benchmarks/fused_tick,
+    kernels/paged_attention.fused_paged_decode_attention → a file at
+    the repo root or under src/repro/ (last dotted component may be an
+    attribute)."""
+    cands = [token, token.rstrip("/")]
+    if ".py" not in token and "." in token.rsplit("/", 1)[-1]:
+        cands.append(token[:token.rindex(".")])    # strip .attribute
+    out = []
+    for c in cands:
+        out += [c, c + ".py"] if not c.endswith(".py") else [c]
+    for c in out:
+        for base in (ROOT, ROOT / "src" / "repro"):
+            p = base / c
+            if p.is_file() or p.is_dir():
+                return True
+    return False
+
+
+def check_file(rel: str) -> list:
+    path = ROOT / rel
+    text = path.read_text()
+    prose = _FENCE.sub("", text)
+    errors = []
+
+    for target in _LINK.findall(prose):
+        if target.startswith(("http://", "https://", "#", "mailto:", "../")):
+            continue
+        t = target.split("#")[0]
+        if t and not (path.parent / t).exists() and not (ROOT / t).exists():
+            errors.append(f"{rel}: broken link → {target}")
+
+    for tok in _INLINE.findall(prose):
+        tok = tok.strip().rstrip(".,;:")
+        if _DOTTED.match(tok):
+            if not _module_exists(tok):
+                errors.append(f"{rel}: unknown module `{tok}`")
+        elif "/" in tok and _PATHY.match(tok) and "*" not in tok:
+            if not _path_exists(tok):
+                errors.append(f"{rel}: unknown path `{tok}`")
+
+    for mod in _PY_M.findall(text):               # incl. fenced examples
+        if mod.startswith(("repro", "benchmarks", "tools")) \
+                and not _module_exists(mod):
+            errors.append(f"{rel}: `python -m {mod}` target missing")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for rel in DOC_FILES:
+        if not (ROOT / rel).is_file():
+            errors.append(f"missing doc file: {rel}")
+            continue
+        errors.extend(check_file(rel))
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} broken doc reference(s)")
+        return 1
+    print(f"docs OK: {len(DOC_FILES)} files, all intra-repo references "
+          f"resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
