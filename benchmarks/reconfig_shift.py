@@ -1,0 +1,157 @@
+"""Live reconfiguration vs frozen placement on a regime-shift trace —
+the runtime proof that the reconfiguration subsystem
+(``serving/reconfig.py``, DESIGN.md §10) earns its keep.
+
+Three colocated reduced LLMs are placed by popularity: the two
+popular ones share the big (4-device) mesh, the cold one sits on a
+1-device mesh.  Halfway through the trace the popularity FLIPS
+(``core/workload.piecewise_poisson_trace``): the cold LLM jumps to
+the hot rate and the old favourite goes quiet.  The same trace is
+served twice on real engines under the deterministic tick-cost clock
+(bit-reproducible — per-unit tick cost scales with mesh devices):
+
+  * **static** — the PR-3 behaviour: the startup placement replays
+    unchanged, so the newly-hot LLM grinds on the small mesh;
+  * **reconfig** — a ``ReconfigController`` watches EWMA arrival
+    rates, detects the drift, re-solves the assignment onto the fixed
+    meshes and live-migrates the hot LLM's engine + KV to the big
+    mesh (decodes carry their cache, prefills requeue, fused groups
+    rebuild), charging the modeled migration stall to the clock.
+
+CI gates on the ordering: live reconfiguration must finish every
+request (zero drops) and attain strictly more SLO than the frozen
+placement at some scale, with at least one executed migration.
+Artifact: ``experiments/results/reconfig_shift.json``.
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.config import replace
+from repro.core.estimator import LLMSpec
+from repro.core.placement import Mesh, Placement
+from repro.core.workload import piecewise_poisson_trace
+from repro.serving.driver import (TickCostModel, serve_workload,
+                                  units_from_placement)
+from repro.serving.reconfig import MigrationCostModel, ReconfigController
+
+from benchmarks.common import save
+
+ARCH = "qwen2-7b"
+NAMES = ("llm0", "llm1", "llm2")
+HOT, WARM, COLD = 25.0, 2.0, 0.5     # req/s before the flip
+CHUNK_TOKENS = 16
+MAX_SLOTS = 4
+POOL_BLOCKS = 16_000
+MEAN_PROMPT, MEAN_OUTPUT = 24, 10
+SLO_SCALES = (1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0)
+COST = TickCostModel()
+
+
+def shift_workload(horizon: float, seed: int = 0):
+    """Popularity flip at t = horizon/2: llm0 and llm2 swap rates."""
+    pre = {"llm0": HOT, "llm1": WARM, "llm2": COLD}
+    post = {"llm0": COLD, "llm1": WARM, "llm2": HOT}
+    return piecewise_poisson_trace(
+        [(0.0, pre), (horizon / 2, post)], horizon, seed=seed,
+        mean_prompt=MEAN_PROMPT, mean_output=MEAN_OUTPUT, max_len=256)
+
+
+def initial_placement() -> Placement:
+    """The popularity-aligned startup plan: hot+warm on the 4-device
+    mesh, cold alone on 1 device (what ``place`` picks for the
+    pre-flip rates, hand-pinned so the benchmark is self-contained)."""
+    cfg = configs.get(ARCH)
+
+    def spec(name, rate):
+        return LLMSpec(replace(cfg, name=name), rate,
+                       mean_prompt=MEAN_PROMPT, mean_output=MEAN_OUTPUT,
+                       tp=1, sm_frac=1.0, arch=ARCH)
+
+    return Placement(
+        meshes=[Mesh(0, 4, [spec("llm0", HOT), spec("llm1", WARM)]),
+                Mesh(1, 1, [spec("llm2", COLD)])],
+        total_tpt=HOT + WARM + COLD)
+
+
+def _units(pl: Placement, policy: str = "adbs"):
+    return units_from_placement(pl, pool_blocks=POOL_BLOCKS,
+                                max_slots=MAX_SLOTS,
+                                chunk_tokens=CHUNK_TOKENS, seed=0,
+                                policy=policy, fused=True)
+
+
+def run(quick: bool = False, horizon: float = 6.0) -> dict:
+    if quick:
+        horizon = 4.0
+    wl = shift_workload(horizon)
+    out = {
+        "arch": ARCH, "names": list(NAMES), "horizon": horizon,
+        "rates_pre": {"llm0": HOT, "llm1": WARM, "llm2": COLD},
+        "rates_post": {"llm0": COLD, "llm1": WARM, "llm2": HOT},
+        "mean_prompt": MEAN_PROMPT, "mean_output": MEAN_OUTPUT,
+        "chunk_tokens": CHUNK_TOKENS, "max_slots": MAX_SLOTS,
+        "pool_blocks": POOL_BLOCKS, "n_requests": len(wl.requests),
+        "slo_scales": list(SLO_SCALES),
+        "tick_cost": {"base": COST.base, "prefill_tok": COST.prefill_tok,
+                      "decode_tok": COST.decode_tok},
+        "runs": {},
+    }
+    print(f"[reconfig_shift] {len(wl.requests)} requests over {horizon}s, "
+          f"flip at {horizon / 2}s: llm0 {HOT}→{COLD} req/s, "
+          f"llm2 {COLD}→{HOT} req/s")
+
+    # ---- static: the frozen PR-3 placement --------------------------
+    pl = initial_placement()
+    static_rep = serve_workload(_units(pl), wl, seed=1,
+                                slo_scales=SLO_SCALES, cost=COST)
+    out["runs"]["static"] = static_rep.to_json()
+
+    # ---- live reconfiguration ---------------------------------------
+    pl = initial_placement()
+    units = _units(pl)
+    ctrl = ReconfigController(pl, units, interval=0.25,
+                              drift_threshold=2.0, sustain=2,
+                              migration_cost=MigrationCostModel())
+    recfg_rep = serve_workload(units, wl, seed=1, slo_scales=SLO_SCALES,
+                               cost=COST, reconfig=ctrl)
+    out["runs"]["reconfig"] = recfg_rep.to_json()
+
+    for tag, rep in (("static", static_rep), ("reconfig", recfg_rep)):
+        agg = rep.aggregate
+        att = ", ".join(f"{s:g}×:{agg.attainment[s]:.2f}"
+                        for s in SLO_SCALES)
+        print(f"[reconfig_shift] {tag:9s}: {agg.finished}/{agg.submitted} "
+              f"finished over {rep.horizon:.2f} logical s "
+              f"({rep.ticks} ticks) | e2e p99={agg.e2e.p99:.3f}s "
+              f"| SLO[{att}]")
+    rc = recfg_rep.reconfig
+    print(f"[reconfig_shift] reconfig events={rc.events} moves={rc.moves} "
+          f"migrated_blocks={rc.migrated_blocks} requeued={rc.requeued} "
+          f"stall_ticks={rc.stall_ticks}")
+
+    # ---- CI gates ----------------------------------------------------
+    s_att = static_rep.aggregate.attainment
+    r_att = recfg_rep.aggregate.attainment
+    assert static_rep.aggregate.finished == len(wl.requests), \
+        "static run dropped requests"
+    assert recfg_rep.aggregate.finished == len(wl.requests), \
+        "reconfig run dropped requests"
+    assert rc.events >= 1 and rc.moves >= 1, \
+        "the regime shift must trigger at least one migration"
+    better = [s for s in SLO_SCALES if r_att[s] > s_att[s]]
+    out["reconfig_strictly_better_scales"] = better
+    out["reconfig_events"] = rc.to_json()
+    assert better, ("live reconfiguration must strictly beat the frozen "
+                    f"placement at some SLO scale; static={s_att}, "
+                    f"reconfig={r_att}")
+    print(f"[reconfig_shift] reconfig strictly better at scales {better}")
+    save("reconfig_shift", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.quick)

@@ -20,7 +20,8 @@ def main() -> int:
     from benchmarks import (fig3_compute_fraction, fig5_synthetic,
                             fig7_real, fig8_placement, fig9_adbs,
                             fig10_manager, fig11_p99, fused_tick,
-                            kernel_bench, roofline, slo_attainment)
+                            kernel_bench, reconfig_shift, roofline,
+                            slo_attainment)
     jobs = [
         ("fig3_compute_fraction", lambda: fig3_compute_fraction.run()),
         ("fig5_synthetic", lambda: fig5_synthetic.run(args.quick)),
@@ -31,6 +32,7 @@ def main() -> int:
         ("fig11_p99", lambda: fig11_p99.run(args.quick)),
         ("fused_tick", lambda: fused_tick.run(args.quick)),
         ("slo_attainment", lambda: slo_attainment.run(args.quick)),
+        ("reconfig_shift", lambda: reconfig_shift.run(args.quick)),
         ("kernel_bench", lambda: kernel_bench.run(args.quick)),
         ("roofline_16x16", lambda: roofline.run("16x16")),
         ("roofline_2x16x16", lambda: roofline.run("2x16x16")),

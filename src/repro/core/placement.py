@@ -256,6 +256,59 @@ def place(models: Sequence[Tuple[ModelConfig, float]], n_devices: int,
     return best
 
 
+def place_onto_meshes(models: Sequence[Tuple[ModelConfig, float]],
+                      mesh_sizes: Sequence[Tuple[int, int]],
+                      hw: Hardware = A100, mean_prompt: int = 161,
+                      mean_output: int = 338,
+                      archs: Optional[Dict[str, str]] = None) -> Placement:
+    """Alg. 1's greedy inner loop over a FIXED mesh structure.
+
+    ``place`` enumerates mesh groups because at planning time the
+    cluster partition is free; *online* re-placement (the live
+    reconfiguration subsystem, ``serving/reconfig.py``) operates on
+    physical units that already hold weights and KV, so only the
+    LLM → mesh assignment (plus each LLM's tp / sm_frac candidate)
+    re-solves — re-partitioning meshes would mean cross-node weight
+    reloads.  ``mesh_sizes`` is ``[(mesh_id, n_devices), ...]``;
+    ``archs`` optionally maps unit-unique names to base architecture
+    ids (propagated onto the specs so the placement → runtime bridge
+    keeps resolving configs).  Greedy order and the throughput-delta
+    mesh choice are identical to ``place``.
+    """
+    assert models and mesh_sizes
+    archs = archs or {}
+    max_mesh = max(n for _, n in mesh_sizes)
+    cands = {cfg.name: parallel_candidates(cfg, rate, hw, max_tp=max_mesh,
+                                           mean_prompt=mean_prompt,
+                                           mean_output=mean_output)
+             for cfg, rate in models}
+    meshes = [Mesh(mid, n) for mid, n in mesh_sizes]
+    order = sorted(models,
+                   key=lambda mr: _computation_requirement(*mr), reverse=True)
+    for cfg, rate in order:
+        best_mesh, best_delta, best_spec = None, -math.inf, None
+        for mesh in meshes:
+            cand = _fit_candidate(cands[cfg.name], mesh.n_devices)
+            if cand is None:
+                continue
+            spec = LLMSpec(cfg, rate, mean_prompt, mean_output,
+                           tp=cand.tp, sm_frac=cand.sm_frac,
+                           arch=archs.get(cfg.name))
+            before = unit_throughput(mesh.specs, mesh.n_devices, hw)
+            after = unit_throughput(mesh.specs + [spec],
+                                    mesh.n_devices, hw)
+            if not math.isfinite(after):
+                continue
+            delta = after - (before if math.isfinite(before) else 0.0)
+            if delta > best_delta:
+                best_mesh, best_delta, best_spec = mesh, delta, spec
+        assert best_mesh is not None, \
+            f"no mesh can host {cfg.name} at rate {rate}"
+        best_mesh.specs.append(best_spec)
+    tpt = sum(max(m.throughput(hw), 0.0) for m in meshes)
+    return Placement(meshes, tpt)
+
+
 def _fit_candidate(cands: List[Candidate], mesh_size: int
                    ) -> Optional[Candidate]:
     """Largest-TP candidate that fits the mesh (more TP → lower latency,

@@ -131,6 +131,51 @@ def poisson_trace(rates: Dict[str, float], horizon: float, seed: int = 0,
     return Workload(rates=dict(rates), requests=reqs, horizon=horizon)
 
 
+def piecewise_poisson_trace(segments: Sequence[Tuple[float, Dict[str, float]]],
+                            horizon: float, seed: int = 0,
+                            mean_prompt: int = 161, mean_output: int = 338,
+                            max_len: int = 2048) -> Workload:
+    """Regime-shift traces: piecewise-constant per-LLM rate schedules.
+
+    ``segments`` is ``[(t_start, rates), ...]`` sorted ascending with
+    ``t_start == 0`` first; segment k spans ``[t_k, t_{k+1})`` (the
+    last runs to ``horizon``) and draws Poisson arrivals per LLM at
+    that segment's rates.  This is the workload the live
+    reconfiguration subsystem exists for (serving/reconfig.py;
+    OServe/AlpaServe-style popularity drift — e.g. a popularity flip
+    at t=H/2): a static placement solved for segment 0 strands quota
+    and mesh capacity once the rates shift.  ``Workload.rates``
+    carries the TIME-AVERAGED per-LLM rates, so quota splits and drift
+    baselines start from the honest long-run mix.  Deterministic for
+    a fixed seed, like every generator here.
+    """
+    assert segments and segments[0][0] == 0.0, \
+        "segments must start at t=0"
+    starts = [t for t, _ in segments]
+    assert starts == sorted(starts), "segments must be time-sorted"
+    assert horizon > starts[-1], "horizon must extend past the last segment"
+    rng = np.random.default_rng(seed)
+    names = sorted({m for _, rates in segments for m in rates})
+    avg = {m: 0.0 for m in names}
+    reqs: List[RequestSpec] = []
+    for k, (t0, seg_rates) in enumerate(segments):
+        t1 = segments[k + 1][0] if k + 1 < len(segments) else horizon
+        span = t1 - t0
+        for m in names:
+            rate = seg_rates.get(m, 0.0)
+            avg[m] += rate * span / horizon
+            if rate <= 0:
+                continue
+            n = rng.poisson(rate * span)
+            times = np.sort(rng.uniform(t0, t1, n))
+            pl, ol = sharegpt_lengths(rng, n, mean_prompt, mean_output,
+                                      max_len)
+            reqs.extend(RequestSpec(m, float(t), int(p), int(o))
+                        for t, p, o in zip(times, pl, ol))
+    reqs.sort(key=lambda r: r.arrival)
+    return Workload(rates=avg, requests=reqs, horizon=horizon)
+
+
 def synthesize(models: Sequence[str], alpha: float, max_rate: float,
                horizon: float, seed: int = 0,
                scale_to_avg: Optional[float] = None,

@@ -30,11 +30,14 @@ import json
 
 from repro import configs
 from repro.config import replace
-from repro.core.placement import (load_placement, place, save_placement)
+from repro.core.estimator import LLMSpec
+from repro.core.placement import (Mesh, Placement, load_placement, place,
+                                  save_placement)
 from repro.core.workload import poisson_trace, power_law_rates
 from repro.serving.driver import (TickCostModel, build_unit_from_specs,
                                   serve_workload, units_from_placement)
 from repro.serving.engine import TRACE_COUNTS, unique_tree_bytes
+from repro.serving.reconfig import ReconfigController
 
 
 def _unit_names(archs):
@@ -89,11 +92,24 @@ def main() -> int:
                     help="cluster size for --save-placement")
     ap.add_argument("--report", default=None, metavar="OUT_JSON",
                     help="write the full ServeReport JSON here")
+    ap.add_argument("--reconfig", action="store_true",
+                    help="live reconfiguration: watch arrival-rate "
+                         "drift, re-solve the placement online and "
+                         "migrate engines/KV between units "
+                         "(serving/reconfig.py; DESIGN.md §10)")
+    ap.add_argument("--reconfig-interval", type=float, default=1.0,
+                    help="drift-monitor window length in clock seconds")
+    ap.add_argument("--drift-threshold", type=float, default=2.0,
+                    help="estimated/planned rate ratio that arms the "
+                         "re-plan trigger (sustained for 2 windows)")
     args = ap.parse_args()
 
     if args.placement and args.save_placement:
         ap.error("--placement and --save-placement are mutually "
                  "exclusive (load a plan OR optimize and save one)")
+    if args.reconfig and args.policy == "fcfs":
+        ap.error("--reconfig needs a multiplexing policy (adbs or "
+                 "round_robin); fcfs has no quotas to rebalance")
     archs = args.archs.split(",")
     names = _unit_names(archs)
     slo_scales = tuple(float(s) for s in args.slo_scales.split(","))
@@ -164,9 +180,34 @@ def main() -> int:
               "sequentially on one host thread — per-mesh latencies "
               "absorb the other meshes' compute; use --deterministic "
               "to model units as parallel hardware")
+
+    # ---- live reconfiguration control plane --------------------------
+    ctrl = None
+    if args.reconfig:
+        if pl is None:
+            # single colocated unit: wrap it in a one-mesh placement so
+            # the re-planner has a plan to diff against (moves are
+            # impossible with one mesh, quota rebalances still apply)
+            specs = [LLMSpec(replace(configs.get(a), name=n), rates[n],
+                             mean_prompt=args.mean_prompt,
+                             mean_output=args.mean_output,
+                             tp=1, sm_frac=1.0, arch=a)
+                     for n, a in zip(names, archs)]
+            pl_ctrl = Placement([Mesh(0, args.devices, specs)],
+                                sum(rates.values()))
+        else:
+            pl_ctrl = pl
+        ctrl = ReconfigController(pl_ctrl, units,
+                                  interval=args.reconfig_interval,
+                                  drift_threshold=args.drift_threshold)
+        print(f"[serve] reconfig on: window={args.reconfig_interval}s, "
+              f"drift threshold {args.drift_threshold}×, "
+              f"{len(ctrl.units)} unit(s)")
+
     report = serve_workload(units, wl, seed=args.seed,
                             max_new_cap=args.max_new,
-                            slo_scales=slo_scales, cost=cost)
+                            slo_scales=slo_scales, cost=cost,
+                            reconfig=ctrl)
 
     # ---- report ------------------------------------------------------
     agg = report.aggregate
@@ -174,6 +215,15 @@ def main() -> int:
           f"{report.ticks} ticks in {report.wall_s:.1f}s wall")
     for line in report.summary().splitlines():
         print(f"[serve] {line}")
+    if report.reconfig is not None:
+        for ev in report.reconfig.log:
+            moves = ", ".join(f"{n}: mesh{src}→mesh{dst}"
+                              for n, src, dst in ev["moves"]) or "quotas only"
+            print(f"[serve] reconfig @{ev['t']:.2f}s "
+                  f"(drift {ev['drift']:.1f}×): {moves}; "
+                  f"{ev['migrated_blocks']} blocks migrated, "
+                  f"{ev['requeued']} prefills requeued, "
+                  f"{ev['quota_moved']} quota moved")
     for u in units:
         pool = u.pool
         print(f"[serve] pool: free={pool.allocator.free_blocks}"

@@ -52,6 +52,7 @@ from repro.models.transformer import init_params
 from repro.serving.engine import Engine, Request
 from repro.serving.kvcache import UnifiedKVPool
 from repro.serving.mux import MuxScheduler
+from repro.serving.reconfig import ReconfigController, WorkloadMonitor
 
 # same default ladder as core/simulator.simulate — keep in sync, the
 # reports are meant to be compared side by side
@@ -104,9 +105,19 @@ class TickCostModel:
     prefill_tok: float = 2e-4
     decode_tok: float = 2e-3
 
-    def dt(self, prefill_tokens: int, decode_tokens: int) -> float:
-        return (self.base + prefill_tokens * self.prefill_tok
-                + decode_tokens * self.decode_tok)
+    def dt(self, prefill_tokens: int, decode_tokens: int,
+           devices: int = 1) -> float:
+        """``devices`` scales the per-token (compute) cost: a mesh of
+        N devices moves tokens N× faster, while the per-tick dispatch
+        ``base`` stays fixed.  The solo SLO reference stays at
+        ``devices=1`` — the paper's reference is single-DEVICE
+        execution latency, independent of where the placement put the
+        model — so attainment rewards giving a hot LLM a bigger mesh
+        (live reconfiguration's whole point) instead of silently
+        re-normalizing it away."""
+        return (self.base + (prefill_tokens * self.prefill_tok
+                             + decode_tokens * self.decode_tok)
+                / max(devices, 1))
 
     def solo_reference(self, prompt_len: int, output_len: int,
                        chunk_tokens: Optional[int] = None) -> float:
@@ -276,10 +287,15 @@ def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
             continue
         blocks = max(int(pool_blocks * m.n_devices / total_dev), 4096)
         unit_specs = [(s.name, s.arch_id, s.rate) for s in m.specs]
-        units.append(build_unit_from_specs(
+        u = build_unit_from_specs(
             unit_specs, pool_blocks=blocks, max_slots=max_slots,
             chunk_tokens=chunk_tokens, seed=seed + m.mesh_id,
-            policy=policy, fused=fused))
+            policy=policy, fused=fused)
+        # mesh identity for the reconfiguration subsystem + mesh size
+        # for the deterministic clock's per-unit tick scaling
+        u.mesh_id = m.mesh_id
+        u.n_devices = m.n_devices
+        units.append(u)
     assert units, "placement has no populated mesh"
     return units
 
@@ -331,6 +347,40 @@ class LLMReport:
 
 
 @dataclass
+class ReconfigSummary:
+    """Reconfiguration-events section of a ``ServeReport``: how often
+    the control plane fired, what it moved, and what it cost
+    (``serving/reconfig.py``; DESIGN.md §10)."""
+    events: int = 0
+    moves: int = 0
+    migrated_blocks: int = 0
+    requeued: int = 0
+    quota_moved: int = 0
+    stall_ticks: int = 0
+    dt_charged: float = 0.0
+    log: List[dict] = field(default_factory=list)
+
+    @classmethod
+    def of(cls, events) -> "ReconfigSummary":
+        return cls(events=len(events),
+                   moves=sum(len(e.moves) for e in events),
+                   migrated_blocks=sum(e.migrated_blocks for e in events),
+                   requeued=sum(e.requeued for e in events),
+                   quota_moved=sum(e.quota_moved for e in events),
+                   stall_ticks=sum(e.stall_ticks for e in events),
+                   dt_charged=sum(e.dt_charged for e in events),
+                   log=[e.to_json() for e in events])
+
+    def to_json(self) -> dict:
+        return {"events": self.events, "moves": self.moves,
+                "migrated_blocks": self.migrated_blocks,
+                "requeued": self.requeued,
+                "quota_moved": self.quota_moved,
+                "stall_ticks": self.stall_ticks,
+                "dt_charged": self.dt_charged, "log": self.log}
+
+
+@dataclass
 class ServeReport:
     horizon: float                           # clock time at last finish
     wall_s: float                            # real wall time (diagnostic)
@@ -339,6 +389,12 @@ class ServeReport:
     slo_scales: Tuple[float, ...]
     per_llm: Dict[str, LLMReport]
     aggregate: LLMReport
+    # drift visibility (always populated when planned rates are known,
+    # reconfig enabled or not): the workload monitor's final per-LLM
+    # EWMA arrival-rate estimates next to the planned rates
+    planned_rates: Dict[str, float] = field(default_factory=dict)
+    rate_estimates: Dict[str, float] = field(default_factory=dict)
+    reconfig: Optional[ReconfigSummary] = None
 
     def summary(self) -> str:
         a = self.aggregate
@@ -358,6 +414,20 @@ class ServeReport:
                          f"ttft_p99={r.ttft.p99:.3f}s "
                          f"tpot_p99={r.tpot.p99 * 1e3:.1f}ms "
                          f"e2e_p99={r.e2e.p99:.2f}s | SLO[{att}]")
+        if self.rate_estimates:
+            pairs = ", ".join(
+                f"{n}:{self.rate_estimates[n]:.2f}"
+                f"(plan {self.planned_rates.get(n, 0.0):.2f})"
+                for n in self.rate_estimates)
+            lines.append(f"rates est(plan) req/s: {pairs}")
+        if self.reconfig is not None:
+            r = self.reconfig
+            lines.append(
+                f"reconfig: {r.events} events, {r.moves} moves, "
+                f"{r.migrated_blocks} KV head-blocks migrated, "
+                f"{r.requeued} prefills requeued, "
+                f"{r.stall_ticks} stall ticks "
+                f"({r.dt_charged * 1e3:.1f}ms charged)")
         return "\n".join(lines)
 
     def to_json(self) -> dict:
@@ -365,7 +435,11 @@ class ServeReport:
                 "ticks": self.ticks, "deterministic": self.deterministic,
                 "slo_scales": list(self.slo_scales),
                 "aggregate": self.aggregate.to_json(),
-                "per_llm": {k: v.to_json() for k, v in self.per_llm.items()}}
+                "per_llm": {k: v.to_json() for k, v in self.per_llm.items()},
+                "planned_rates": dict(self.planned_rates),
+                "rate_estimates": dict(self.rate_estimates),
+                "reconfig": (self.reconfig.to_json()
+                             if self.reconfig else None)}
 
 
 def _roll_up(name: str, reqs: List[Request], horizon: float,
@@ -455,7 +529,10 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                    cost: Optional[TickCostModel] = None,
                    refs: Optional[Dict[str, SLORef]] = None,
                    warm: bool = True,
-                   max_ticks: int = 500_000) -> ServeReport:
+                   max_ticks: int = 500_000,
+                   planned_rates: Optional[Dict[str, float]] = None,
+                   reconfig: Optional[ReconfigController] = None
+                   ) -> ServeReport:
     """Drive real units through an arrival-ordered request list and
     roll the ``Request`` timelines up into a ``ServeReport``.
 
@@ -467,6 +544,15 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     overrides calibration), and — unless ``warm=False`` — a warm-up
     replay of the trace so jit compilation lands outside the measured
     window (steady-state serving, not cold start).
+
+    ``planned_rates`` (per-LLM req/s, e.g. a plan's or trace's rates)
+    enables the drift monitor: the report then carries final EWMA
+    arrival-rate estimates next to the plan, whether or not
+    reconfiguration is on.  ``reconfig`` plugs in a live
+    ``ReconfigController`` (serving/reconfig.py): the loop reports
+    arrivals, calls ``step`` each iteration, charges executed events'
+    modeled stall to the logical clock (deterministic mode) and
+    refreshes request routing after engine moves.
 
     CAVEAT (realtime + multiple units): units are ticked sequentially
     on one host thread under ONE wall clock, so each mesh's latencies
@@ -499,6 +585,16 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
         for eng in u.engines.values():
             eng.clock = clock
 
+    # drift monitor: the controller's when reconfiguring, a standalone
+    # one when only planned rates are known (drift stays visible in
+    # every report), none otherwise
+    monitor: Optional[WorkloadMonitor] = None
+    if reconfig is not None:
+        monitor = reconfig.monitor
+    elif planned_rates is not None:
+        monitor = WorkloadMonitor(planned_rates)
+    planned0 = dict(monitor.planned) if monitor else {}
+
     requests = sorted(requests, key=lambda r: r.arrival)
     idx, ticks = 0, 0
     wall0 = time.perf_counter()
@@ -507,6 +603,8 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
         while idx < len(requests) and requests[idx].arrival <= now:
             r = requests[idx]
             owner[r.model].submit(r)
+            if monitor is not None:
+                monitor.observe(r.model, len(r.prompt) + r.max_new_tokens)
             idx += 1
         busy = [u for u in units if u.pending()]
         if busy:
@@ -516,7 +614,8 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                 u.tick()
                 if deterministic:
                     dt = max(dt, cost.dt(u.stats.prefill_tokens - p0,
-                                         u.stats.decode_tokens - d0))
+                                         u.stats.decode_tokens - d0,
+                                         devices=u.n_devices))
             if deterministic:
                 clock.advance(dt)
             ticks += 1
@@ -529,7 +628,20 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                 clock.advance(max(gap, 0.0))
             else:
                 time.sleep(min(max(gap, 0.0), 0.005))
+        if reconfig is not None:
+            ev = reconfig.step(clock())
+            if ev is not None:
+                if deterministic:
+                    # the migration's modeled stall hits every queued
+                    # and in-flight request, like any other tick cost
+                    clock.advance(ev.dt_charged)
+                if ev.moves:
+                    owner.update(reconfig.owner_map())
+        elif monitor is not None:
+            monitor.advance(clock())
     wall_s = time.perf_counter() - wall0
+    if monitor is not None:
+        monitor.advance(clock())           # close trailing windows
 
     horizon = max([clock()] + [r.finish for r in requests if r.finish >= 0])
     by_model: Dict[str, List[Request]] = {n: [] for n in engines}
@@ -539,9 +651,14 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     per_llm = {n: _roll_up(n, rs, horizon, scales, ref_fn)
                for n, rs in by_model.items()}
     agg = _roll_up("aggregate", requests, horizon, scales, ref_fn)
-    return ServeReport(horizon=horizon, wall_s=wall_s, ticks=ticks,
-                       deterministic=deterministic, slo_scales=scales,
-                       per_llm=per_llm, aggregate=agg)
+    return ServeReport(
+        horizon=horizon, wall_s=wall_s, ticks=ticks,
+        deterministic=deterministic, slo_scales=scales,
+        per_llm=per_llm, aggregate=agg,
+        planned_rates=planned0,
+        rate_estimates=(dict(monitor.rate_ewma) if monitor else {}),
+        reconfig=(ReconfigSummary.of(reconfig.events)
+                  if reconfig is not None else None))
 
 
 def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
@@ -549,13 +666,17 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                    slo_scales: Sequence[float] = DEFAULT_SLO_SCALES,
                    cost: Optional[TickCostModel] = None,
                    refs: Optional[Dict[str, SLORef]] = None,
-                   max_ticks: int = 500_000) -> ServeReport:
+                   max_ticks: int = 500_000,
+                   reconfig: Optional[ReconfigController] = None
+                   ) -> ServeReport:
     """``serve_requests`` over a ``core/workload.py`` trace (the shared
-    simulator/runtime arrival process)."""
+    simulator/runtime arrival process).  The trace's per-LLM rates
+    feed the drift monitor as the planned baseline."""
     engines: Dict[str, Engine] = {}
     for u in units:
         engines.update(u.engines)
     reqs = requests_from_workload(wl, engines, seed=seed,
                                   max_new_cap=max_new_cap)
     return serve_requests(units, reqs, slo_scales=slo_scales, cost=cost,
-                          refs=refs, max_ticks=max_ticks)
+                          refs=refs, max_ticks=max_ticks,
+                          planned_rates=dict(wl.rates), reconfig=reconfig)

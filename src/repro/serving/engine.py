@@ -289,6 +289,47 @@ class Engine:
         self.params = stacked
         self.model_index = model_index
 
+    def materialize_private(self) -> None:
+        """Inverse of ``adopt_stacked``: re-own a private ``[1, ...]``
+        stacked copy of this engine's weights, sliced out of whatever
+        tree it currently points at.  Live reconfiguration dissolves a
+        fused group through this before the group's shared buffer is
+        dropped — every step keeps the same (stacked, model_index)
+        signature, only the tree narrows back to M=1."""
+        m = self.model_index
+        self.params = jax.tree_util.tree_map(lambda a: a[m:m + 1],
+                                             self.params)
+        self.model_index = 0
+
+    def rebind_view(self, view: ModelCacheView) -> None:
+        """Point the engine at a migrated cache view (and its pool).
+        The view must carry this engine's live sequences — block
+        tables and lengths are re-resolved from it on every step, so
+        in-flight decodes continue without any engine-side fixup."""
+        assert view.cfg.name == self.cfg.name
+        self.view = view
+        self.pool = view.pool
+
+    def evict_prefilling(self) -> List[Request]:
+        """Evict every in-flight (chunk-phase) prefill: free its cache,
+        reset its progress and hand the requests back for requeueing.
+        Migration uses drain-or-carry per request — decodes carry
+        their KV to the destination pool, but a half-written prompt is
+        cheaper to restart than to move (the chunk position would have
+        to migrate too); greedy decoding makes the restart exact."""
+        out: List[Request] = []
+        for slot in sorted(self._prefilling):
+            r = self.slots[slot]
+            self.view.free_seq(int(self.slot_seq[slot]))
+            self.slots[slot] = None
+            self.slot_seq[slot] = -1
+            r.output.clear()
+            r.prefill_done = -1.0
+            r.first_token = -1.0
+            out.append(r)
+        self._prefilling.clear()
+        return out
+
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]

@@ -84,6 +84,29 @@ class BlockAllocator:
         else:
             self._free.append((start, start + n))
 
+    def shrink(self, n: int) -> int:
+        """Remove up to ``n`` head-blocks from the END of the arena.
+
+        The inverse of ``grow``: only entirely-free tail space is
+        released — in-use blocks are never reclaimed, so a shrink that
+        would cut below a live allocation is clamped to the free tail
+        (possibly 0).  When the tail is idle, ``shrink(n)`` after
+        ``grow(n)`` restores the arena exactly.  Returns the number of
+        blocks actually removed.
+        """
+        if n <= 0:
+            return 0
+        take = 0
+        if self._free and self._free[-1][1] == self.n_blocks:
+            s, e = self._free[-1]
+            take = min(n, e - s)
+            if take == e - s:
+                self._free.pop()
+            else:
+                self._free[-1] = (s, e - take)
+        self.n_blocks -= take
+        return take
+
     @property
     def free_blocks(self) -> int:
         return self.n_blocks - self.used
@@ -285,6 +308,23 @@ class UnifiedKVPool:
         self.n_head_blocks = n
         return extra_blocks
 
+    def shrink(self, extra_blocks: int) -> int:
+        """Release up to ``extra_blocks`` head-blocks from the arena
+        tail — the inverse of ``grow`` (live reconfiguration dissolves
+        a fused group and returns its zero-copy grant before the
+        members re-materialize private weight copies; DESIGN.md §10).
+        Only free tail space is released — the allocator refuses to
+        cut below in-use blocks — so the returned count may be smaller
+        than requested.  Returns the blocks actually removed.
+        """
+        removed = self.allocator.shrink(extra_blocks)
+        if removed:
+            n = self.n_head_blocks - removed
+            self.k = self.k[:n]
+            self.v = self.v[:n]
+            self.n_head_blocks = n
+        return removed
+
     def register_model(self, cfg: ModelConfig, quota: int) -> ModelCacheView:
         assert cfg.attn_free or cfg.hd == self.head_dim or True, \
             "pools are grouped by head_dim"
@@ -292,6 +332,14 @@ class UnifiedKVPool:
         self.views[cfg.name] = v
         self.used_by[cfg.name] = 0
         return v
+
+    def unregister_model(self, name: str) -> None:
+        """Drop a model's view (its sequences must already be freed or
+        migrated away) — the source-pool half of an engine move."""
+        v = self.views.pop(name, None)
+        self.used_by.pop(name, None)
+        assert v is None or not v.seqs, \
+            "unregistering a view with live sequences leaks pool blocks"
 
     def grant_min_quota(self, view: "ModelCacheView", need: int) -> bool:
         """Raise ``view``'s quota to at least ``need`` head-blocks by
@@ -339,3 +387,98 @@ class UnifiedKVPool:
 
     def utilization(self) -> float:
         return self.allocator.used / self.n_head_blocks
+
+
+def migrate_view(src: ModelCacheView, dst_pool: "UnifiedKVPool",
+                 quota: int) -> Tuple[ModelCacheView, int]:
+    """Move one LLM's live cache between pools (engine/KV migration —
+    the zero-downtime half of live reconfiguration, DESIGN.md §10).
+
+    Every sequence keeps its identity: logical token-blocks are
+    re-allocated in the destination arena, the KV pages are copied
+    device-side (physical ids resolved through
+    ``paging.resolve_physical_blocks`` — the SAME resolution every
+    kernel uses, so the copy can never disagree with the pool layout),
+    and the per-sequence bookkeeping (block tables, lengths, SSM state
+    accounting) is rebuilt on a fresh ``ModelCacheView``.  In-flight
+    decodes continue bit-identically off the new pool because the
+    pages are exact copies and block tables are always re-resolved
+    from the view at step time.  The source view is drained and
+    unregistered.
+
+    Returns ``(dst_view, migrated_head_blocks)``.  Raises if the
+    destination pool cannot hold the live cache (the caller sizes the
+    move; nothing is freed on failure).
+    """
+    import jax.numpy as jnp
+
+    from repro.paging import resolve_physical_blocks
+
+    cfg = src.cfg
+    assert dst_pool is not src.pool, "migrate_view needs two pools"
+    assert dst_pool.block_tokens == src.pool.block_tokens \
+        and dst_pool.head_dim == src.pool.head_dim \
+        and dst_pool.dtype == src.pool.dtype, \
+        "pools must share block geometry for a page-exact migration"
+    n_groups = sum(len(sc.bases) for sc in src.seqs.values())
+    if n_groups * src.group_size > dst_pool.allocator.free_blocks:
+        raise RuntimeError(
+            f"destination pool cannot hold migrated KV of {cfg.name}: "
+            f"need {n_groups * src.group_size} head-blocks, "
+            f"free {dst_pool.allocator.free_blocks}")
+
+    dst = dst_pool.register_model(cfg, quota)
+    src_bases: List[int] = []
+    dst_bases: List[int] = []
+    for sid, sc in src.seqs.items():
+        new_bases = []
+        for _ in sc.bases:
+            nb = dst_pool.allocator.alloc(dst.group_size)
+            if nb is None:
+                # the free-space total passed the pre-check but no
+                # CONTIGUOUS group-size run is left (fragmentation from
+                # other views' churn) — roll the half-built destination
+                # back completely; the source is untouched until the
+                # copy below, so the caller can abort the move cleanly
+                for b in new_bases + dst_bases:
+                    dst_pool.allocator.free(b, dst.group_size)
+                dst.seqs.clear()
+                dst.used = 0
+                dst_pool.unregister_model(cfg.name)
+                raise RuntimeError(
+                    f"destination pool too fragmented for {cfg.name}: "
+                    f"no contiguous {dst.group_size}-block run "
+                    f"(free {dst_pool.allocator.free_blocks}, largest "
+                    f"run {dst_pool.allocator.largest_free_range()})")
+            new_bases.append(nb)
+        dst.seqs[sid] = SeqCache(sid, new_bases, sc.n_tokens)
+        src_bases.extend(sc.bases)
+        dst_bases.extend(new_bases)
+        used = len(new_bases) * dst.group_size
+        if cfg.ssm and sid in src._started:
+            used += dst._ssm_blocks_per_seq
+        dst.used += used
+    dst._started = set(src._started)
+    dst.quota = max(dst.quota, dst.used)
+    dst_pool.used_by[cfg.name] = dst.used
+
+    migrated = 0
+    if src_bases:
+        # resolve logical group bases to physical head-block ids layer
+        # by layer — elementwise aligned between source and destination
+        # tables, so the gather/scatter below is an exact page copy
+        st = jnp.asarray(np.array([src_bases], np.int32))
+        dt = jnp.asarray(np.array([dst_bases], np.int32))
+        kv, n_l = cfg.n_kv_heads, cfg.n_attn_layers
+        sp = jnp.concatenate([resolve_physical_blocks(st, li, kv)
+                              for li in range(n_l)], axis=1).reshape(-1)
+        dp = jnp.concatenate([resolve_physical_blocks(dt, li, kv)
+                              for li in range(n_l)], axis=1).reshape(-1)
+        dst_pool.k = dst_pool.k.at[dp].set(src.pool.k[sp])
+        dst_pool.v = dst_pool.v.at[dp].set(src.pool.v[sp])
+        migrated = int(sp.shape[0])
+
+    for sid in list(src.seqs):
+        src.free_seq(sid)
+    src.pool.unregister_model(cfg.name)
+    return dst, migrated

@@ -105,6 +105,12 @@ class FusedGroup:
         for m, e in enumerate(engines):
             e.adopt_stacked(self.params, m)
         self.reclaimed_bytes = member_bytes
+        # pool grant bookkeeping, set by the scheduler when it converts
+        # reclaimed_bytes into head-blocks: total blocks grown into the
+        # pool and the per-member quota share — dissolve() needs both
+        # to hand the grant back (live reconfiguration, DESIGN.md §10)
+        self.granted_blocks = 0
+        self.quota_share = 0
         self._decode_fn = jitted_step("fused_decode", self.cfg_key)
         self._prefill_fn = (jitted_step("fused_prefill_chunk", self.cfg_key)
                             if self.chunk_tokens else None)
@@ -112,6 +118,15 @@ class FusedGroup:
     def weight_bytes(self) -> int:
         """Live weight bytes of the whole group (de-duplicated)."""
         return unique_tree_bytes([e.params for e in self.engines])
+
+    def dissolve(self) -> None:
+        """Undo the zero-copy adoption: every member re-materializes a
+        private ``[1, ...]`` slice of its weights so the shared stacked
+        tree can be dropped.  The scheduler pairs this with revoking
+        the quota shares and shrinking the pool by ``granted_blocks``
+        (``MuxScheduler.dissolve_fused_groups``)."""
+        for e in self.engines:
+            e.materialize_private()
 
     def decode(self, jobs) -> int:
         """Run one fused decode step.  ``jobs`` is aligned with
@@ -221,32 +236,120 @@ class MuxScheduler:
         self._serial_names = list(engines)          # serial decode set
         self._prefill_serial_names = list(engines)  # serial prefill set
         self.reclaimed_weight_bytes = 0
+        # mesh identity + device count inside a placement
+        # (units_from_placement tags both); −1 / 1 for hand-built
+        # units.  The reconfiguration subsystem keys its migration
+        # schedule on mesh_id; the deterministic clock scales a tick's
+        # per-token cost by n_devices (bigger mesh = faster tick).
+        self.mesh_id = -1
+        self.n_devices = 1
+        # un-returned zero-copy grant: blocks a dissolve wanted back
+        # but the pool's in-use tail kept (UnifiedKVPool.shrink
+        # clamps).  The next build settles this debt before growing,
+        # so repeated dissolve/rebuild cycles (live reconfiguration)
+        # cannot inflate the arena past its reclaimed-weight backing.
+        self._grant_debt = 0
         if self.fused:
-            by_sig: Dict[tuple, List[str]] = {}
-            for name, eng in engines.items():
-                sig = eng.fusion_signature()
-                if sig is not None:
-                    by_sig.setdefault(sig, []).append(name)
-            grouped, chunk_grouped = set(), set()
-            for names in by_sig.values():
-                if len(names) >= 2:
-                    grp = FusedGroup([engines[n] for n in names], names)
-                    self.fused_groups.append(grp)
-                    grouped.update(names)
-                    if grp.chunk_tokens:
-                        chunk_grouped.update(names)
-                    # zero-copy dividend: de-duplicated weight bytes
-                    # become KV head-blocks for the group's LLMs
-                    granted = pool.grow(grp.reclaimed_bytes
-                                        // pool.head_block_bytes)
-                    share = granted // len(grp.engines)
-                    if share:
-                        for e in grp.engines:
-                            e.view.quota += share
-                    self.reclaimed_weight_bytes += grp.reclaimed_bytes
-            self._serial_names = [n for n in engines if n not in grouped]
-            self._prefill_serial_names = [n for n in engines
-                                          if n not in chunk_grouped]
+            self._build_fused_groups()
+
+    def _build_fused_groups(self) -> None:
+        """Group engines by fusion signature, stack weights zero-copy,
+        and grant the de-dup dividend to the pool (the __init__ path,
+        shared with live-reconfiguration rebuilds)."""
+        by_sig: Dict[tuple, List[str]] = {}
+        for name, eng in self.engines.items():
+            sig = eng.fusion_signature()
+            if sig is not None:
+                by_sig.setdefault(sig, []).append(name)
+        grouped, chunk_grouped = set(), set()
+        for names in by_sig.values():
+            if len(names) >= 2:
+                grp = FusedGroup([self.engines[n] for n in names], names)
+                self.fused_groups.append(grp)
+                grouped.update(names)
+                if grp.chunk_tokens:
+                    chunk_grouped.update(names)
+                # zero-copy dividend: de-duplicated weight bytes
+                # become KV head-blocks for the group's LLMs — minus
+                # any un-returned grant from a prior dissolve (the
+                # arena still holds those blocks; re-growing the full
+                # amount would double-count the reclaimed bytes)
+                want = grp.reclaimed_bytes // self.pool.head_block_bytes
+                settle = min(self._grant_debt, want)
+                self._grant_debt -= settle
+                granted = self.pool.grow(want - settle) + settle
+                share = granted // len(grp.engines)
+                grp.granted_blocks = granted
+                grp.quota_share = share
+                if share:
+                    for e in grp.engines:
+                        e.view.quota += share
+                self.reclaimed_weight_bytes += grp.reclaimed_bytes
+        self._serial_names = [n for n in self.engines if n not in grouped]
+        self._prefill_serial_names = [n for n in self.engines
+                                      if n not in chunk_grouped]
+
+    def dissolve_fused_groups(self) -> int:
+        """Undo every fused group: members re-own private weight
+        copies, their quota shares are revoked (clamped so quota never
+        drops below live usage) and the pool shrinks by the zero-copy
+        grant — ``UnifiedKVPool.shrink`` refuses to cut below in-use
+        blocks, so a grant whose tail is occupied is only partially
+        returned (the arena re-grows on the next build).  Returns the
+        head-blocks actually shrunk."""
+        shrunk = 0
+        for grp in self.fused_groups:
+            grp.dissolve()
+            if grp.quota_share:
+                for e in grp.engines:
+                    e.view.quota -= min(grp.quota_share,
+                                        max(e.view.quota - e.view.used, 0))
+            got = self.pool.shrink(grp.granted_blocks)
+            self._grant_debt += grp.granted_blocks - got
+            shrunk += got
+            self.reclaimed_weight_bytes -= grp.reclaimed_bytes
+        self.fused_groups = []
+        self._serial_names = list(self.engines)
+        self._prefill_serial_names = list(self.engines)
+        return shrunk
+
+    def rebuild_fused_groups(self) -> None:
+        """Re-derive fused groups after a membership change (an engine
+        joined or left the unit).  Dissolve-then-build keeps one code
+        path for the zero-copy stacking and its pool grant."""
+        self.dissolve_fused_groups()
+        if self.fused:
+            self._build_fused_groups()
+
+    # ------------------------------------------------------------------
+    def remove_engine(self, name: str):
+        """Detach one engine for migration: dissolve its fused group
+        (and rebuild the remainder), drop it from every scheduling
+        structure and hand back ``(engine, queued_requests)``.  The
+        engine keeps its live slots and cache view — the caller
+        migrates the view and re-homes the engine via ``add_engine``.
+        """
+        assert name in self.engines, name
+        eng = self.engines.pop(name)
+        queued = list(self.queues.pop(name))
+        self._names = list(self.engines)
+        self._prefill_rr = self._decode_rr = 0
+        self.rebuild_fused_groups()
+        return eng, queued
+
+    def add_engine(self, name: str, eng, queued=()) -> None:
+        """Adopt a migrated engine (and its carried queue) into this
+        unit: it joins the tick rotation, inherits the scheduler's
+        clock, and fuses with matching-signature residents."""
+        assert name not in self.engines, name
+        assert eng.pool is self.pool, \
+            "migrate the engine's view to this unit's pool first"
+        self.engines[name] = eng
+        self.queues[name] = deque(queued)
+        eng.clock = self.clock
+        self._names = list(self.engines)
+        self._prefill_rr = self._decode_rr = 0
+        self.rebuild_fused_groups()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -353,7 +456,7 @@ class MuxScheduler:
             eng = self.engines[name]
             if eng.has_decode_work():
                 total += eng.decode()
-        self._decode_rr = (self._decode_rr + 1) % n
+        self._decode_rr = (self._decode_rr + 1) % max(n, 1)
         return total
 
     def _run_decode_fused(self) -> int:

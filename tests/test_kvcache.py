@@ -51,6 +51,75 @@ def test_allocator_exhaustion():
     assert a.alloc(8) == 0
 
 
+def test_allocator_shrink_exact_inverse_of_grow_when_idle():
+    a = BlockAllocator(128)
+    a.grow(64)
+    assert a.n_blocks == 192 and a.free_blocks == 192
+    assert a.shrink(64) == 64
+    assert a.n_blocks == 128 and a.free_blocks == 128
+    assert a.largest_free_range() == 128
+    # idle arena shrinks all the way to zero if asked
+    assert a.shrink(1_000) == 128
+    assert a.n_blocks == 0 and a.free_blocks == 0
+
+
+def test_allocator_shrink_refuses_in_use_tail():
+    a = BlockAllocator(64)
+    s = a.alloc(64)
+    assert a.shrink(16) == 0, "a fully-used arena must not shrink"
+    assert a.n_blocks == 64
+    a.free(s, 64)
+    # now only the free tail is reclaimable past a live head range
+    s = a.alloc(16)                     # occupies [0, 16)
+    assert a.shrink(64) == 48, "clamp to the free tail"
+    assert a.n_blocks == 16 and a.free_blocks == 0
+    a.free(s, 16)
+    assert a.free_blocks == 16
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 256), st.integers(0, 256), st.integers(0, 512))
+def test_allocator_grow_shrink_roundtrip(base, grown, live):
+    """grow(n) then shrink(n) restores the arena exactly whenever the
+    grown tail stayed idle, regardless of interior allocations."""
+    a = BlockAllocator(base)
+    s = a.alloc(min(live, base)) if live and min(live, base) > 0 else None
+    used = a.used
+    a.grow(grown)
+    assert a.free_blocks == base - used + grown
+    assert a.shrink(grown) == grown
+    assert a.n_blocks == base and a.used == used
+    if s is not None:
+        a.free(s, min(live, base))
+    assert a.free_blocks == base
+
+
+def test_pool_shrink_inverse_of_grow():
+    pool = _pool(1024)
+    k0, v0 = pool.k.shape, pool.v.shape
+    assert pool.grow(512) == 512
+    assert pool.k.shape[0] == 1536
+    assert pool.shrink(512) == 512
+    assert pool.n_head_blocks == 1024
+    assert pool.k.shape == k0 and pool.v.shape == v0
+    assert pool.allocator.free_blocks == 1024
+
+
+def test_pool_shrink_clamped_by_live_blocks():
+    pool = _pool(256)
+    cfg = configs.get_reduced("qwen2-7b")
+    view = pool.register_model(cfg, quota=256)
+    assert view.append_tokens(0, BLOCK_TOKENS)   # head of the arena live
+    pool.grow(64)
+    removed = pool.shrink(1_000)
+    assert removed == 256 + 64 - view.used, \
+        "shrink stops at the in-use head range"
+    assert pool.n_head_blocks == view.used
+    assert pool.k.shape[0] == view.used
+    view.free_seq(0)
+    assert pool.allocator.used == 0
+
+
 # ---------------------------------------------------------------------------
 # pool + per-model views
 # ---------------------------------------------------------------------------

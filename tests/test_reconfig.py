@@ -1,0 +1,418 @@
+"""Live reconfiguration subsystem (serving/reconfig.py): drift
+monitor hysteresis, zero-downtime engine/KV migration (bit-identical
+post-migration logits, fused and serial paths), fused-group
+dissolve/rebuild pool accounting, and the end-to-end controller on a
+regime-shift trace (DESIGN.md §10)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import replace
+from repro.core.estimator import LLMSpec
+from repro.core.placement import Mesh, Placement, place_onto_meshes
+from repro.core.workload import piecewise_poisson_trace
+from repro.serving.driver import (LogicalClock, TickCostModel,
+                                  build_unit_from_specs, serve_workload,
+                                  units_from_placement)
+from repro.serving.engine import Request, _next_pow2, _pad_rows
+from repro.serving.kvcache import migrate_view
+from repro.serving.reconfig import (MigrationCostModel, ReconfigController,
+                                    WorkloadMonitor, diff_placements)
+
+COST = TickCostModel()
+
+
+# ---------------------------------------------------------------------------
+# drift monitor
+# ---------------------------------------------------------------------------
+def test_monitor_ewma_and_hysteresis():
+    mon = WorkloadMonitor({"a": 4.0, "b": 1.0}, interval=1.0, alpha=0.5,
+                          threshold=2.0, sustain=2, eps=1.0)
+    # window 1: a keeps its rate, no drift
+    for _ in range(4):
+        mon.observe("a", tokens=10)
+    mon.observe("b")
+    assert mon.advance(1.0) == 1
+    assert mon.rate_ewma["a"] == pytest.approx(4.0)
+    assert not mon.triggered()
+    # windows 2..3: a spikes to 16/s — one window must NOT trigger
+    # (hysteresis), the second consecutive one must
+    for _ in range(16):
+        mon.observe("a")
+    assert mon.advance(2.0) == 1
+    assert not mon.triggered(), "one window above threshold must not arm"
+    for _ in range(16):
+        mon.observe("a")
+    mon.advance(3.0)
+    assert mon.triggered()
+    assert mon.max_drift() > 2.0
+    # rebase to the observed rates disarms
+    mon.rebase(dict(mon.rate_ewma))
+    assert not mon.triggered()
+    assert mon.token_ewma["a"] > 0
+
+
+def test_monitor_eps_floor_masks_sparse_noise():
+    """A 0.5 req/s LLM sees mostly empty windows while its busy
+    sibling keeps arriving; the eps floor keeps that Poisson sparsity
+    from arming the trigger even as the cold EWMA decays."""
+    mon = WorkloadMonitor({"cold": 0.5, "busy": 4.0}, interval=0.5,
+                          threshold=2.0, sustain=2, eps=1.0)
+    for w in range(1, 11):
+        for _ in range(2):                 # busy keeps its planned rate
+            mon.observe("busy")
+        mon.advance(0.5 * w)
+    assert mon.rate_ewma["cold"] < 0.01
+    assert not mon.triggered()
+
+
+def test_monitor_idle_windows_frozen():
+    """Totally-idle windows (trace gap / end-of-trace drain) freeze
+    the EWMAs and the trigger — draining decodes must not fire a
+    pointless migration."""
+    mon = WorkloadMonitor({"a": 4.0, "b": 1.0}, interval=0.5,
+                          threshold=2.0, sustain=2, eps=1.0)
+    assert mon.advance(10.0) == 20         # long idle gap
+    assert mon.rate_ewma == {"a": 4.0, "b": 1.0}, "EWMAs frozen"
+    assert not mon.triggered()
+    mon.observe("a")                       # traffic resumes
+    mon.advance(10.5)
+    assert mon.rate_ewma["a"] != 4.0
+
+
+def test_monitor_windows_close_against_callers_clock():
+    mon = WorkloadMonitor({"a": 1.0}, interval=0.25)
+    assert mon.advance(0.2) == 0
+    assert mon.advance(1.0) == 4
+    assert mon.windows_closed == 4
+
+
+# ---------------------------------------------------------------------------
+# KV migration: bit-identical continuation
+# ---------------------------------------------------------------------------
+def _twin_units(fused: bool, clock=None):
+    uA = build_unit_from_specs(
+        [("m0", "qwen2-7b", 2.0), ("m1", "qwen2-7b", 1.0)],
+        pool_blocks=6_000, max_slots=4, chunk_tokens=16, seed=0,
+        policy="adbs", fused=fused)
+    uB = build_unit_from_specs(
+        [("m2", "qwen2-7b", 1.0)], pool_blocks=6_000, max_slots=4,
+        chunk_tokens=16, seed=7, policy="adbs", fused=fused)
+    clock = clock or LogicalClock()
+    for u in (uA, uB):
+        u.clock = clock
+        for e in u.engines.values():
+            e.clock = clock
+    return uA, uB
+
+
+def _requests():
+    rng = np.random.default_rng(3)
+    return ([Request(i, "m1", list(rng.integers(1, 500, 24)), 8)
+             for i in range(3)]
+            + [Request(10 + i, "m0", list(rng.integers(1, 500, 20)), 6)
+               for i in range(2)])
+
+
+def _decode_logits(eng):
+    """Run the engine's decode step WITHOUT committing (pool arrays are
+    copied because jitted steps donate them) — the probe for
+    bit-identical post-migration logits."""
+    job = eng.export_decode_job()
+    assert job is not None
+    B = len(job)
+    lens = eng.view.seq_lens(job.seq_ids)
+    table = eng.view.block_table(job.seq_ids, eng.max_blocks)
+    last_tok = job.last_tok
+    Bp = _next_pow2(B)
+    if Bp != B:
+        last_tok, lens, table = _pad_rows(
+            Bp, (job.last_tok, 0), (lens, 1), (table, -1))
+    _, _, logits, _, _ = eng._decode_fn(
+        eng.params, eng.model_index, jnp.asarray(last_tok),
+        jnp.asarray(lens), eng.pool.k + 0, eng.pool.v + 0,
+        jnp.asarray(table), None, None)
+    return np.asarray(logits[:B])
+
+
+def _migrate_m1(uA, uB):
+    eng, queued = uA.remove_engine("m1")
+    evicted = eng.evict_prefilling()
+    view, blocks = migrate_view(eng.view, uB.pool, quota=eng.view.used)
+    eng.rebind_view(view)
+    uB.add_engine("m1", eng, list(evicted) + list(queued))
+    return blocks
+
+
+@pytest.mark.parametrize("fused", [True, False],
+                         ids=["fused", "serial"])
+def test_migrated_decode_bit_identical(fused):
+    """A decode continued after KV migration produces bit-identical
+    logits (and therefore tokens) to an unmigrated twin run — the
+    page copy is exact and block tables re-resolve from the new pool.
+    """
+    # twin 1: never migrated
+    uA_ref, uB_ref = _twin_units(fused)
+    for r in _requests():
+        uA_ref.submit(r)
+    for _ in range(6):
+        uA_ref.tick()
+    ref_logits = _decode_logits(uA_ref.engines["m1"])
+
+    # twin 2: identical history, then m1 migrates mid-decode
+    uA, uB = _twin_units(fused)
+    reqs = _requests()
+    for r in reqs:
+        uA.submit(r)
+    for _ in range(6):
+        uA.tick()
+    blocks = _migrate_m1(uA, uB)
+    assert blocks > 0, "mid-decode migration must carry live KV pages"
+    mig_logits = _decode_logits(uB.engines["m1"])
+    assert np.array_equal(ref_logits, mig_logits), \
+        "post-migration logits must be bit-identical"
+
+    # ... and the completed outputs match the twin exactly, with no
+    # request dropped (drain-or-carry)
+    for _ in range(600):
+        if not (uA.pending() + uB.pending() + uA_ref.pending()
+                + uB_ref.pending()):
+            break
+        for u in (uA, uB, uA_ref, uB_ref):
+            if u.pending():
+                u.tick()
+    ref_out = {r.req_id: list(r.output) for r in uA_ref.stats.finished}
+    mig_out = {r.req_id: list(r.output)
+               for u in (uA, uB) for r in u.stats.finished}
+    assert set(ref_out) == set(mig_out) == {r.req_id for r in reqs}
+    assert ref_out == mig_out
+
+
+def test_migrate_view_copies_pages_and_frees_source():
+    uA, uB = _twin_units(fused=False)
+    eng = uA.engines["m1"]
+    for r in _requests():
+        uA.submit(r)
+    for _ in range(6):
+        uA.tick()
+    src_pool = eng.pool
+    seqs_before = {sid: (list(sc.bases), sc.n_tokens)
+                   for sid, sc in eng.view.seqs.items()}
+    assert seqs_before
+    src_used = eng.view.used
+    gs = eng.view.group_size
+    # capture source pages per sequence (contiguous head-block groups)
+    src_pages = {
+        sid: np.concatenate([np.asarray(src_pool.k[b:b + gs])
+                             for b in bases])
+        for sid, (bases, _) in seqs_before.items()}
+
+    view, blocks = migrate_view(eng.view, uB.pool, quota=src_used)
+    eng.rebind_view(view)
+    assert blocks == sum(len(b) for b, _ in seqs_before.values()) * gs
+    # per-sequence bookkeeping carried over; pages bit-identical
+    for sid, (bases, n_tokens) in seqs_before.items():
+        assert view.seqs[sid].n_tokens == n_tokens
+        dst = np.concatenate([np.asarray(uB.pool.k[b:b + gs])
+                              for b in view.seqs[sid].bases])
+        assert np.array_equal(src_pages[sid], dst)
+    assert view.used == src_used
+    # source fully released and unregistered
+    assert "m1" not in src_pool.views
+    assert src_pool.used_by.get("m1") is None
+
+
+def test_prefilling_requests_requeue_not_carry():
+    """Drain-or-carry: a request still in its prompt chunks at
+    migration time is evicted, requeued at the destination and
+    restarted exactly (greedy decoding)."""
+    uA_ref, _ = _twin_units(fused=False)
+    reqs_ref = _requests()
+    for r in reqs_ref:
+        uA_ref.submit(r)
+    uA_ref.tick()                       # chunks in flight
+    uA, uB = _twin_units(fused=False)
+    reqs = _requests()
+    for r in reqs:
+        uA.submit(r)
+    eng = uA.engines["m1"]
+    for _ in range(4):                  # round-robin reaches m1 by now
+        uA.tick()
+        if eng.has_prefill_work():
+            break
+    assert eng.has_prefill_work(), "ticks must leave m1 chunks in flight"
+    n_prefilling = len(eng._prefilling)
+    eng2, queued = uA.remove_engine("m1")
+    evicted = eng2.evict_prefilling()
+    assert len(evicted) == n_prefilling and evicted
+    for r in evicted:
+        assert r.prefill_done < 0 and r.first_token < 0 and not r.output
+    view, blocks = migrate_view(eng2.view, uB.pool, quota=eng2.view.used)
+    eng2.rebind_view(view)
+    uB.add_engine("m1", eng2, list(evicted) + list(queued))
+    for _ in range(600):
+        if not (uA.pending() + uB.pending() + uA_ref.pending()):
+            break
+        for u in (uA, uB, uA_ref):
+            if u.pending():
+                u.tick()
+    ref_out = {r.req_id: list(r.output) for r in uA_ref.stats.finished}
+    mig_out = {r.req_id: list(r.output)
+               for u in (uA, uB) for r in u.stats.finished}
+    assert set(mig_out) == {r.req_id for r in reqs}, "zero drops"
+    assert ref_out == mig_out, "restarted prefills are exact under greedy"
+
+
+def test_move_skipped_when_destination_full():
+    """A move whose destination pool cannot hold the live KV is
+    skipped whole — the engine never detaches, nothing is dropped,
+    and the plan records the spec back at its source mesh."""
+    from repro.serving.reconfig import MigrationExecutor
+
+    uA, uB = _twin_units(fused=False)
+    for r in _requests():
+        uA.submit(r)
+    for _ in range(6):
+        uA.tick()
+    # exhaust the destination pool so the pre-check fails
+    hog = uB.pool.allocator.alloc(uB.pool.allocator.free_blocks)
+    assert uB.pool.allocator.free_blocks == 0
+    uA.mesh_id, uB.mesh_id = 0, 1
+    ex = MigrationExecutor({0: uA, 1: uB})
+    pl = _shift_placement()
+    stats = ex.execute([("m1", 0, 1)], pl)
+    assert stats["executed"] == [] and stats["skipped"] == [("m1", 0, 1)]
+    assert "m1" in uA.engines and "m1" not in uB.engines
+    uB.pool.allocator.free(hog, uB.pool.n_head_blocks)
+    # drain: every request still finishes on the source unit
+    for _ in range(600):
+        if not uA.pending():
+            break
+        uA.tick()
+    assert len(uA.stats.finished) == len(_requests())
+
+
+# ---------------------------------------------------------------------------
+# fused-group dissolve/rebuild pool accounting
+# ---------------------------------------------------------------------------
+def test_group_dissolve_returns_pool_grant():
+    u = build_unit_from_specs(
+        [("g0", "qwen2-7b", 1.0), ("g1", "qwen2-7b", 1.0)],
+        pool_blocks=6_000, max_slots=2, chunk_tokens=16, seed=0,
+        policy="adbs", fused=True)
+    assert len(u.fused_groups) == 1
+    grp = u.fused_groups[0]
+    granted = grp.granted_blocks
+    assert granted > 0
+    assert u.pool.n_head_blocks == 6_000 + granted
+    # removing a member dissolves the group: idle pool → the shrink is
+    # the exact inverse of the grant
+    eng, _ = u.remove_engine("g1")
+    assert not u.fused_groups
+    assert u.pool.n_head_blocks == 6_000
+    assert u.reclaimed_weight_bytes == 0
+    # each engine owns a private [1, ...] stack again
+    assert eng.params["tok"]["embed"].shape[0] == 1
+    assert eng.model_index == 0
+    # re-adding rebuilds the group and re-grows the grant
+    u.add_engine("g1", eng)
+    assert len(u.fused_groups) == 1
+    assert u.pool.n_head_blocks == 6_000 + u.fused_groups[0].granted_blocks
+
+
+# ---------------------------------------------------------------------------
+# re-planner + controller end-to-end
+# ---------------------------------------------------------------------------
+def _shift_placement():
+    cfg = configs.get("qwen2-7b")
+
+    def spec(name, rate):
+        return LLMSpec(replace(cfg, name=name), rate, mean_prompt=16,
+                       mean_output=6, tp=1, sm_frac=1.0, arch="qwen2-7b")
+
+    return Placement(
+        meshes=[Mesh(0, 4, [spec("llm0", 12.0), spec("llm1", 2.0)]),
+                Mesh(1, 1, [spec("llm2", 0.5)])],
+        total_tpt=14.5)
+
+
+def test_place_onto_meshes_tracks_rates():
+    """The online re-planner assigns the hot LLM to the big mesh —
+    for pre-flip rates that reproduces the startup layout, for
+    post-flip rates it demands a move."""
+    pl = _shift_placement()
+    models_pre = [(s.cfg, s.rate) for m in pl.meshes for s in m.specs]
+    mesh_sizes = [(m.mesh_id, m.n_devices) for m in pl.meshes]
+    pre = place_onto_meshes(models_pre, mesh_sizes, mean_prompt=16,
+                            mean_output=6)
+    assert {s.name: m.mesh_id for m in pre.meshes
+            for s in m.specs}["llm0"] == 0
+    post_rates = {"llm0": 0.5, "llm1": 2.0, "llm2": 12.0}
+    models_post = [(s.cfg, post_rates[s.name])
+                   for m in pl.meshes for s in m.specs]
+    post = place_onto_meshes(models_post, mesh_sizes, mean_prompt=16,
+                             mean_output=6)
+    assert {s.name: m.mesh_id for m in post.meshes
+            for s in m.specs}["llm2"] == 0
+    moves = diff_placements(pre, post)
+    assert any(n == "llm2" and dst == 0 for n, _, dst in moves)
+
+
+def _serve_shift(reconfig: bool, horizon=2.4):
+    pl = _shift_placement()
+    wl = piecewise_poisson_trace(
+        [(0.0, {"llm0": 12.0, "llm1": 2.0, "llm2": 0.5}),
+         (horizon / 2, {"llm0": 0.5, "llm1": 2.0, "llm2": 12.0})],
+        horizon, seed=0, mean_prompt=16, mean_output=6, max_len=128)
+    units = units_from_placement(pl, pool_blocks=12_000, max_slots=4,
+                                 chunk_tokens=16, seed=0, policy="adbs",
+                                 fused=True)
+    ctrl = None
+    if reconfig:
+        ctrl = ReconfigController(pl, units, interval=0.2,
+                                  drift_threshold=2.0, sustain=2,
+                                  migration_cost=MigrationCostModel())
+    rep = serve_workload(units, wl, seed=1, slo_scales=(2.0, 4.0, 8.0),
+                         cost=COST, reconfig=ctrl)
+    return wl, rep
+
+
+def test_controller_end_to_end_zero_drops_and_events():
+    wl, rep = _serve_shift(reconfig=True)
+    assert rep.aggregate.finished == rep.aggregate.submitted \
+        == len(wl.requests), "migration must not drop requests"
+    assert rep.reconfig is not None and rep.reconfig.events >= 1
+    assert rep.reconfig.moves >= 1, "the flip must move an engine"
+    assert rep.reconfig.stall_ticks > 0
+    assert rep.reconfig.dt_charged > 0
+    # drift section: estimates next to the original plan
+    assert set(rep.planned_rates) == {"llm0", "llm1", "llm2"}
+    assert rep.planned_rates["llm0"] == 12.0
+    assert rep.rate_estimates["llm2"] > rep.planned_rates["llm2"]
+    ev = rep.reconfig.log[0]
+    assert set(ev) >= {"t", "drift", "moves", "migrated_blocks",
+                       "requeued", "quota_moved", "dt_charged",
+                       "stall_ticks"}
+
+
+def test_controller_deterministic_reproducible():
+    """Reconfiguration rides the logical clock: two fresh runs of the
+    same shift trace are bit-identical, events included."""
+    _, a = _serve_shift(reconfig=True)
+    _, b = _serve_shift(reconfig=True)
+    assert a.horizon == b.horizon and a.ticks == b.ticks
+    assert a.aggregate.attainment == b.aggregate.attainment
+    assert a.aggregate.e2e == b.aggregate.e2e
+    assert a.reconfig.to_json() == b.reconfig.to_json()
+    assert a.rate_estimates == b.rate_estimates
+
+
+def test_static_report_still_exposes_estimates():
+    """Drift is visible in every report, reconfig enabled or not."""
+    wl, rep = _serve_shift(reconfig=False)
+    assert rep.reconfig is None
+    assert rep.planned_rates and rep.rate_estimates
+    assert rep.rate_estimates["llm2"] > 2.0, \
+        "the post-flip surge must show in the EWMA estimates"
+    assert "rates est(plan)" in rep.summary()

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core.workload import (chatlmsys_like, cumulative_rate_distribution,
-                                 power_law_rates, sharegpt_lengths,
-                                 synthesize, table1_models)
+                                 piecewise_poisson_trace, power_law_rates,
+                                 sharegpt_lengths, synthesize, table1_models)
 
 
 def test_table1_mix():
@@ -50,6 +50,48 @@ def test_sharegpt_lengths():
     assert 100 <= p.mean() <= 240            # mean prompt ≈ 161
     assert 230 <= o.mean() <= 470            # mean output ≈ 338
     assert p.min() >= 4 and p.max() <= 2048
+
+
+def test_piecewise_segment_rates():
+    """Per-segment arrival counts follow that segment's rates (a
+    popularity flip at t=H/2), and the trace's ``rates`` field is the
+    time-averaged mix."""
+    H = 400.0
+    wl = piecewise_poisson_trace(
+        [(0.0, {"a": 6.0, "b": 1.0}), (H / 2, {"a": 1.0, "b": 6.0})],
+        horizon=H, seed=0)
+    assert wl.rates == {"a": 3.5, "b": 3.5}
+    for model, pre_rate, post_rate in (("a", 6.0, 1.0), ("b", 1.0, 6.0)):
+        pre = sum(1 for r in wl.requests
+                  if r.model == model and r.arrival < H / 2)
+        post = sum(1 for r in wl.requests
+                   if r.model == model and r.arrival >= H / 2)
+        for n, rate in ((pre, pre_rate), (post, post_rate)):
+            expect = rate * H / 2
+            assert abs(n - expect) < 5 * np.sqrt(expect) + 5, \
+                (model, n, expect)
+    arr = [r.arrival for r in wl.requests]
+    assert arr == sorted(arr)
+    assert max(arr) < H
+
+
+def test_piecewise_deterministic():
+    seg = [(0.0, {"a": 4.0}), (2.0, {"a": 0.5, "b": 8.0})]
+    w1 = piecewise_poisson_trace(seg, horizon=6.0, seed=3)
+    w2 = piecewise_poisson_trace(seg, horizon=6.0, seed=3)
+    w3 = piecewise_poisson_trace(seg, horizon=6.0, seed=4)
+    as_tuples = lambda wl: [(r.model, r.arrival, r.prompt_len, r.output_len)
+                            for r in wl.requests]
+    assert as_tuples(w1) == as_tuples(w2)
+    assert as_tuples(w1) != as_tuples(w3)
+
+
+def test_piecewise_rejects_bad_segments():
+    with pytest.raises(AssertionError):
+        piecewise_poisson_trace([(1.0, {"a": 1.0})], horizon=2.0)
+    with pytest.raises(AssertionError):
+        piecewise_poisson_trace([(0.0, {"a": 1.0}), (3.0, {"a": 2.0})],
+                                horizon=2.0)
 
 
 def test_chatlmsys_like():
