@@ -21,7 +21,7 @@ def main() -> int:
                             fig7_real, fig8_placement, fig9_adbs,
                             fig10_manager, fig11_p99, fused_tick,
                             kernel_bench, reconfig_shift, roofline,
-                            slo_attainment)
+                            slo_attainment, spatial_mux)
     jobs = [
         ("fig3_compute_fraction", lambda: fig3_compute_fraction.run()),
         ("fig5_synthetic", lambda: fig5_synthetic.run(args.quick)),
@@ -32,6 +32,7 @@ def main() -> int:
         ("fig11_p99", lambda: fig11_p99.run(args.quick)),
         ("fused_tick", lambda: fused_tick.run(args.quick)),
         ("slo_attainment", lambda: slo_attainment.run(args.quick)),
+        ("spatial_mux", lambda: spatial_mux.run(args.quick)),
         ("reconfig_shift", lambda: reconfig_shift.run(args.quick)),
         ("kernel_bench", lambda: kernel_bench.run(args.quick)),
         ("roofline_16x16", lambda: roofline.run("16x16")),

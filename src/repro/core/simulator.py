@@ -383,6 +383,10 @@ class SimReport:
     finished: int
     submitted: int
     kv_util_by_llm: Dict[str, float] = field(default_factory=dict)
+    # per-LLM finished req/s — the runtime's ``LLMReport.throughput``
+    # twin, so sim↔runtime throughput ORDERINGS are directly comparable
+    # (tests/test_sm_frac.py gates on this for shared placements)
+    per_llm_tpt: Dict[str, float] = field(default_factory=dict)
 
     def summary(self) -> str:
         att = ", ".join(f"{k:g}×:{v:.2%}" for k, v in
@@ -474,4 +478,4 @@ def simulate(placement: Placement, workload: Workload, mode: str,
         throughput=tpt, rate_weighted_tpt=weighted, slo_attainment=att,
         p99_latency=p99(lats), p99_ttft=p99(ttfts), p99_tpot=p99(tpots),
         finished=len(done), submitted=len(workload.requests),
-        kv_util_by_llm=kv_util)
+        kv_util_by_llm=kv_util, per_llm_tpt=per_tpt)

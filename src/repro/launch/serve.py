@@ -83,6 +83,19 @@ def main() -> int:
                          "(reproducible SLO numbers; DESIGN.md §9)")
     ap.add_argument("--pool-blocks", type=int, default=200_000)
     ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--sm-frac", default=None, metavar="SHARES",
+                    help="per-LLM compute-share overrides: a comma list "
+                         "aligned with --archs (e.g. 0.5,0.3,0.2) or "
+                         "name=frac pairs (e.g. qwen2-7b#0=0.5); with "
+                         "--placement the overrides patch the plan's "
+                         "shares, without it they turn on share "
+                         "enforcement for the colocated unit "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--no-enforce-shares", action="store_true",
+                    help="ignore planned sm_frac at runtime (legacy "
+                         "temporal accounting: every job is charged as "
+                         "if it held the whole mesh — the pure-temporal "
+                         "baseline of benchmarks/spatial_mux.py)")
     ap.add_argument("--placement", default=None, metavar="PLAN_JSON",
                     help="build units from a core/placement.py plan")
     ap.add_argument("--save-placement", default=None, metavar="PLAN_JSON",
@@ -110,9 +123,41 @@ def main() -> int:
     if args.reconfig and args.policy == "fcfs":
         ap.error("--reconfig needs a multiplexing policy (adbs or "
                  "round_robin); fcfs has no quotas to rebalance")
+    if args.reconfig and not args.deterministic:
+        ap.error("--reconfig requires --deterministic: realtime mode "
+                 "calibrates solo-probe SLO references once at startup, "
+                 "and a migration that moves an engine across meshes "
+                 "leaves its reference stale (the deterministic clock's "
+                 "references are analytic and never go stale)")
     archs = args.archs.split(",")
     names = _unit_names(archs)
     slo_scales = tuple(float(s) for s in args.slo_scales.split(","))
+
+    # ---- per-LLM compute-share overrides -----------------------------
+    sm_overrides = {}
+    if args.sm_frac:
+        parts = args.sm_frac.split(",")
+        try:
+            if any("=" in p for p in parts):
+                for p in parts:
+                    k, eq, v = p.partition("=")
+                    if not eq:
+                        raise ValueError(p)
+                    sm_overrides[k.strip()] = float(v)
+            else:
+                if len(parts) != len(names):
+                    ap.error(f"--sm-frac has {len(parts)} values for "
+                             f"{len(names)} archs (use name=frac pairs to "
+                             "override a subset)")
+                sm_overrides = {n: float(v) for n, v in zip(names, parts)}
+        except ValueError:
+            ap.error(f"--sm-frac could not be parsed: {args.sm_frac!r} "
+                     "(use a comma list of fractions aligned with --archs, "
+                     "or name=frac pairs — not a mix)")
+        bad = [f"{n}={v}" for n, v in sm_overrides.items()
+               if not 0.0 < v <= 1.0]
+        if bad:
+            ap.error(f"--sm-frac values must be in (0, 1]: {', '.join(bad)}")
 
     # ---- units: placement bridge or a single colocated unit ----------
     pl = None
@@ -136,16 +181,36 @@ def main() -> int:
                   f"(est. {pl.total_tpt:.2f} req/s) → "
                   f"{args.save_placement}:\n{pl.describe()}")
     if pl is not None:
+        plan_names = {s.name for m in pl.meshes for s in m.specs}
+        unknown = sorted(set(sm_overrides) - plan_names)
+        if unknown:
+            ap.error(f"--sm-frac names not in the plan: {unknown} "
+                     f"(plan has {sorted(plan_names)})")
+        for m in pl.meshes:
+            for s in m.specs:
+                if s.name in sm_overrides:
+                    s.sm_frac = sm_overrides[s.name]
         units = units_from_placement(
             pl, pool_blocks=args.pool_blocks, max_slots=args.max_slots,
             chunk_tokens=args.chunk_tokens, seed=args.seed,
-            policy=args.policy, fused=args.fused)
+            policy=args.policy, fused=args.fused,
+            enforce_shares=not args.no_enforce_shares)
     else:
+        unknown = sorted(set(sm_overrides) - set(names))
+        if unknown:
+            ap.error(f"--sm-frac names not in --archs: {unknown} "
+                     f"(unit names are {names})")
         specs = [(n, a, rates[n]) for n, a in zip(names, archs)]
+        # a bare-archs unit enforces shares only when the user supplies
+        # them (there is no plan to take shares from)
+        sm_fracs = None
+        if sm_overrides and not args.no_enforce_shares:
+            sm_fracs = {n: sm_overrides.get(n, 1.0) for n in names}
         units = [build_unit_from_specs(
             specs, pool_blocks=args.pool_blocks,
             max_slots=args.max_slots, chunk_tokens=args.chunk_tokens,
-            seed=args.seed, policy=args.policy, fused=args.fused)]
+            seed=args.seed, policy=args.policy, fused=args.fused,
+            sm_fracs=sm_fracs)]
 
     if args.fused and args.policy == "fcfs":
         # fcfs is the temporal-multiplexing baseline: one LLM at a
@@ -162,6 +227,11 @@ def main() -> int:
             print(f"[serve] weight de-dup reclaimed "
                   f"{u.reclaimed_weight_bytes / 1e6:.1f} MB → pool grew "
                   f"to {u.pool.n_head_blocks} head-blocks")
+        if u.enforce_shares:
+            print(f"[serve] unit mesh[{u.mesh_id}] enforces compute "
+                  f"shares: "
+                  + ", ".join(f"{n}:{f:.2f}"
+                              for n, f in u.sm_frac.items()))
 
     # ---- workload: shared generator with the simulator ---------------
     wl = poisson_trace(rates, args.horizon, seed=args.seed,
@@ -218,12 +288,14 @@ def main() -> int:
     if report.reconfig is not None:
         for ev in report.reconfig.log:
             moves = ", ".join(f"{n}: mesh{src}→mesh{dst}"
-                              for n, src, dst in ev["moves"]) or "quotas only"
+                              for n, src, dst in ev["moves"]) \
+                or "quotas/shares only"
             print(f"[serve] reconfig @{ev['t']:.2f}s "
                   f"(drift {ev['drift']:.1f}×): {moves}; "
                   f"{ev['migrated_blocks']} blocks migrated, "
                   f"{ev['requeued']} prefills requeued, "
-                  f"{ev['quota_moved']} quota moved")
+                  f"{ev['quota_moved']} quota moved, "
+                  f"Σ|Δsm_frac|={ev.get('share_moved', 0.0):.2f}")
     for u in units:
         pool = u.pool
         print(f"[serve] pool: free={pool.allocator.free_blocks}"

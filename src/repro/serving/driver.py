@@ -100,10 +100,31 @@ class TickCostModel:
     constants define the solo SLO reference, so attainment is
     self-consistent: a request's reference is what IT would take on an
     otherwise idle unit under this very cost model.
+
+    **Share awareness** (DESIGN.md §11).  ``dt`` is the legacy
+    *temporal* accounting: every token is charged as if its job held
+    the whole mesh, so colocated jobs serialize.  ``tick_dt`` is the
+    *spatial-temporal* accounting for units that enforce placement
+    compute shares (``MuxScheduler.enforce_shares``): each phase is
+    charged ``tokens·per_tok·max(rho/effective_share, 1)/devices`` —
+    the same roofline shape as ``core/costmodel.py`` (compute scales
+    with the share, HBM bandwidth does not), with ``rho`` the phase's
+    compute intensity.  Decode (memory-bound, ``rho_decode`` small) is
+    flat in its share until the share dips below ``rho_decode``;
+    prefill (compute-bound, ``rho_prefill`` ≈ 1) scales ≈ 1/share —
+    paper Fig. 3, re-derived for the logical clock.
     """
     base: float = 4e-3
     prefill_tok: float = 2e-4
     decode_tok: float = 2e-3
+    # phase compute intensities: the fraction of the full-share
+    # per-token cost that is compute-limited (rest is HBM traffic,
+    # which MPS-style share partitioning does not divide)
+    rho_prefill: float = 0.9
+    rho_decode: float = 0.25
+    # no job ever runs below this effective share (MPS floors tiny
+    # percentages; also guards the 1/share scaling)
+    share_floor: float = 0.05
 
     def dt(self, prefill_tokens: int, decode_tokens: int,
            devices: int = 1) -> float:
@@ -118,6 +139,64 @@ class TickCostModel:
         return (self.base + (prefill_tokens * self.prefill_tok
                              + decode_tokens * self.decode_tok)
                 / max(devices, 1))
+
+    def phase_time(self, tokens: int, per_tok: float, rho: float,
+                   share: float, devices: int = 1) -> float:
+        """Roofline time of one phase at an effective compute share:
+        ``tokens·per_tok·max(rho/share, 1)/devices`` — flat in the
+        share while the phase stays memory-bound, 1/share beyond."""
+        e = max(share, self.share_floor)
+        return tokens * per_tok * max(rho / e, 1.0) / max(devices, 1)
+
+    def tick_dt(self, prefill_by: Dict[str, int],
+                decode_by: Dict[str, int], shares: Dict[str, float],
+                devices: int = 1) -> float:
+        """Share-aware tick cost for a unit that enforces ``sm_frac``
+        (the deterministic twin of MPS SM assignment — DESIGN.md §11).
+
+        Decode jobs of the colocated LLMs run *concurrently*, each at
+        its planned share (Eq. 3's ``max_m t_d^m``); shares that
+        oversubscribe the mesh (Σf > 1) slow every decode job
+        proportionally.  Prefill is charged as the better of the two
+        dispatches a flexible scheduler can pick:
+
+          * **serial** — prefill takes the whole mesh after the decode
+            phase (the simulator's Eq. 3: ``Σ t_p + max t_d``);
+          * **spatial** — prefill fills the residual share
+            ``1 − Σ_decoding f_m`` concurrently with the decode phase
+            (Fig. 4's dispatch), with oversubscription contention when
+            the residual is floored.
+
+        A solo full-share engine therefore charges exactly the legacy
+        ``dt`` (serial wins), while planned small decode shares let
+        prefill overlap — which is where the paper's spatial-temporal
+        gain lives.
+        """
+        def f_of(name: str) -> float:
+            return min(max(shares.get(name, 1.0), 0.0), 1.0)
+
+        dec = {n: t for n, t in decode_by.items() if t > 0}
+        pre_tokens = sum(prefill_by.values())
+        demand = sum(f_of(n) for n in dec)
+
+        def t_decode(over: float) -> float:
+            return max((self.phase_time(t, self.decode_tok,
+                                        self.rho_decode,
+                                        f_of(n) / over, devices)
+                        for n, t in dec.items()), default=0.0)
+
+        t_d = t_decode(max(demand, 1.0))
+        if not pre_tokens:
+            return self.base + t_d
+        t_serial = self.phase_time(pre_tokens, self.prefill_tok,
+                                   self.rho_prefill, 1.0, devices) + t_d
+        resid = max(1.0 - demand, self.share_floor)
+        over = max(demand + resid, 1.0)
+        t_spatial = max(self.phase_time(pre_tokens, self.prefill_tok,
+                                        self.rho_prefill, resid / over,
+                                        devices),
+                        t_decode(over))
+        return self.base + min(t_serial, t_spatial)
 
     def solo_reference(self, prompt_len: int, output_len: int,
                        chunk_tokens: Optional[int] = None) -> float:
@@ -239,12 +318,20 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
                           pool_blocks: int = 200_000, max_slots: int = 4,
                           chunk_tokens: int = 0, seed: int = 0,
                           policy: str = "adbs", fused: bool = False,
-                          reduced: bool = True) -> MuxScheduler:
+                          reduced: bool = True,
+                          sm_fracs: Optional[Dict[str, float]] = None
+                          ) -> MuxScheduler:
     """Instantiate one real colocated unit from ``(name, arch, rate)``
     triples: one engine per spec over a shared ``UnifiedKVPool``, with
     the initial head-block quota split ∝ arrival rate — the same
     popularity-proportional initial grant the simulator uses
     (``UnitSim.__init__``); ADBS adapts it from there.
+
+    ``sm_fracs`` (name → planned compute share) turns ON share
+    enforcement for the unit: the scheduler dispatches decode under
+    the shares and the deterministic clock charges phases by effective
+    share (``TickCostModel.tick_dt``).  ``None`` keeps the legacy
+    temporal accounting — the pure-temporal baseline.
     """
     assert specs, "a unit needs at least one (name, arch, rate) spec"
     pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32)
@@ -268,18 +355,29 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
         view = pool.register_model(cfg, quota)
         engines[name] = Engine(cfg, params, view, max_slots=max_slots,
                                chunk_tokens=chunk_tokens or None)
-    return MuxScheduler(engines, pool, policy=policy, fused=fused)
+    return MuxScheduler(engines, pool, policy=policy, fused=fused,
+                        sm_frac=sm_fracs)
 
 
 def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
                          max_slots: int = 4, chunk_tokens: int = 0,
                          seed: int = 0, policy: str = "adbs",
-                         fused: bool = False) -> List[MuxScheduler]:
+                         fused: bool = False,
+                         enforce_shares: bool = True
+                         ) -> List[MuxScheduler]:
     """The placement → runtime bridge: one real unit per non-empty mesh
     of an optimizer plan (group membership = the mesh's LLM set, fused
     where architectures match), REDUCED model variants so the plan runs
     at CPU scale.  Pool blocks are split across meshes ∝ mesh size —
-    the runtime stand-in for per-mesh HBM."""
+    the runtime stand-in for per-mesh HBM.
+
+    Each spec's planned ``sm_frac`` is threaded into its unit (the
+    runtime previously dropped it on the floor — a hand-edited plan
+    file served with shares it never used): the scheduler enforces the
+    shares and the deterministic clock charges phases by them
+    (DESIGN.md §11).  ``enforce_shares=False`` builds the same units
+    with legacy temporal accounting — the pure-temporal baseline arm
+    of ``benchmarks/spatial_mux.py``."""
     total_dev = sum(m.n_devices for m in pl.meshes if m.specs) or 1
     units: List[MuxScheduler] = []
     for m in pl.meshes:
@@ -287,10 +385,12 @@ def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
             continue
         blocks = max(int(pool_blocks * m.n_devices / total_dev), 4096)
         unit_specs = [(s.name, s.arch_id, s.rate) for s in m.specs]
+        sm = {s.name: float(s.sm_frac) for s in m.specs}
         u = build_unit_from_specs(
             unit_specs, pool_blocks=blocks, max_slots=max_slots,
             chunk_tokens=chunk_tokens, seed=seed + m.mesh_id,
-            policy=policy, fused=fused)
+            policy=policy, fused=fused,
+            sm_fracs=(sm if enforce_shares else None))
         # mesh identity for the reconfiguration subsystem + mesh size
         # for the deterministic clock's per-unit tick scaling
         u.mesh_id = m.mesh_id
@@ -356,6 +456,7 @@ class ReconfigSummary:
     migrated_blocks: int = 0
     requeued: int = 0
     quota_moved: int = 0
+    share_moved: float = 0.0
     stall_ticks: int = 0
     dt_charged: float = 0.0
     log: List[dict] = field(default_factory=list)
@@ -367,6 +468,7 @@ class ReconfigSummary:
                    migrated_blocks=sum(e.migrated_blocks for e in events),
                    requeued=sum(e.requeued for e in events),
                    quota_moved=sum(e.quota_moved for e in events),
+                   share_moved=sum(e.share_moved for e in events),
                    stall_ticks=sum(e.stall_ticks for e in events),
                    dt_charged=sum(e.dt_charged for e in events),
                    log=[e.to_json() for e in events])
@@ -376,6 +478,7 @@ class ReconfigSummary:
                 "migrated_blocks": self.migrated_blocks,
                 "requeued": self.requeued,
                 "quota_moved": self.quota_moved,
+                "share_moved": self.share_moved,
                 "stall_ticks": self.stall_ticks,
                 "dt_charged": self.dt_charged, "log": self.log}
 
@@ -394,6 +497,9 @@ class ServeReport:
     # EWMA arrival-rate estimates next to the planned rates
     planned_rates: Dict[str, float] = field(default_factory=dict)
     rate_estimates: Dict[str, float] = field(default_factory=dict)
+    # per-LLM enforced compute shares (empty when no unit enforces
+    # sm_frac): the plan's shares as the runtime actually ran them
+    sm_frac: Dict[str, float] = field(default_factory=dict)
     reconfig: Optional[ReconfigSummary] = None
 
     def summary(self) -> str:
@@ -420,12 +526,17 @@ class ServeReport:
                 f"(plan {self.planned_rates.get(n, 0.0):.2f})"
                 for n in self.rate_estimates)
             lines.append(f"rates est(plan) req/s: {pairs}")
+        if self.sm_frac:
+            lines.append("compute shares (sm_frac): "
+                         + ", ".join(f"{n}:{f:.2f}"
+                                     for n, f in self.sm_frac.items()))
         if self.reconfig is not None:
             r = self.reconfig
             lines.append(
                 f"reconfig: {r.events} events, {r.moves} moves, "
                 f"{r.migrated_blocks} KV head-blocks migrated, "
                 f"{r.requeued} prefills requeued, "
+                f"Σ|Δsm_frac|={r.share_moved:.2f}, "
                 f"{r.stall_ticks} stall ticks "
                 f"({r.dt_charged * 1e3:.1f}ms charged)")
         return "\n".join(lines)
@@ -438,6 +549,7 @@ class ServeReport:
                 "per_llm": {k: v.to_json() for k, v in self.per_llm.items()},
                 "planned_rates": dict(self.planned_rates),
                 "rate_estimates": dict(self.rate_estimates),
+                "sm_frac": dict(self.sm_frac),
                 "reconfig": (self.reconfig.to_json()
                              if self.reconfig else None)}
 
@@ -570,6 +682,18 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
             engines[name] = eng
 
     deterministic = cost is not None
+    if reconfig is not None and not deterministic:
+        # realtime SLO references are calibrated ONCE at startup by
+        # solo probes; a migration that lands an engine on a different
+        # mesh leaves its reference stale, and re-probing mid-serving
+        # would splice probe compute into live batches (corrupting the
+        # very latencies being measured).  Deterministic mode has
+        # analytic references that never go stale — use it.
+        raise ValueError(
+            "live reconfiguration requires the deterministic clock "
+            "(pass cost=TickCostModel()): realtime mode keeps its "
+            "startup-calibrated solo-probe SLO references, which go "
+            "stale when a migration moves an engine across meshes")
     if deterministic:
         clock: Callable[[], float] = LogicalClock()
         ref_fn = tick_cost_refs(engines, cost)
@@ -613,9 +737,19 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                 p0, d0 = u.stats.prefill_tokens, u.stats.decode_tokens
                 u.tick()
                 if deterministic:
-                    dt = max(dt, cost.dt(u.stats.prefill_tokens - p0,
-                                         u.stats.decode_tokens - d0,
-                                         devices=u.n_devices))
+                    if getattr(u, "enforce_shares", False):
+                        # spatial-temporal accounting: the tick's phase
+                        # meters + the unit's planned shares
+                        step = cost.tick_dt(u.tick_prefill_by,
+                                            u.tick_decode_by, u.sm_frac,
+                                            devices=u.n_devices)
+                    else:
+                        # legacy temporal accounting (no shares): every
+                        # job charged as if it held the whole mesh
+                        step = cost.dt(u.stats.prefill_tokens - p0,
+                                       u.stats.decode_tokens - d0,
+                                       devices=u.n_devices)
+                    dt = max(dt, step)
             if deterministic:
                 clock.advance(dt)
             ticks += 1
@@ -651,12 +785,17 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     per_llm = {n: _roll_up(n, rs, horizon, scales, ref_fn)
                for n, rs in by_model.items()}
     agg = _roll_up("aggregate", requests, horizon, scales, ref_fn)
+    shares: Dict[str, float] = {}
+    for u in units:
+        if getattr(u, "enforce_shares", False):
+            shares.update({n: u.sm_frac.get(n, 1.0) for n in u.engines})
     return ServeReport(
         horizon=horizon, wall_s=wall_s, ticks=ticks,
         deterministic=deterministic, slo_scales=scales,
         per_llm=per_llm, aggregate=agg,
         planned_rates=planned0,
         rate_estimates=(dict(monitor.rate_ewma) if monitor else {}),
+        sm_frac=shares,
         reconfig=(ReconfigSummary.of(reconfig.events)
                   if reconfig is not None else None))
 

@@ -331,6 +331,17 @@ class Engine:
         return out
 
     # ------------------------------------------------------------------
+    def _finish_slot(self, slot: int, r: Request) -> None:
+        """Finalize a request: stamp ``finish``, free its cache and
+        slot, hand it to ``finished`` (one definition shared by the
+        decode path and the prefill-completes-the-request edge cases —
+        ``max_new_tokens ≤ 1``)."""
+        r.finish = self.clock()
+        self.view.free_seq(int(self.slot_seq[slot]))
+        self.slots[slot] = None
+        self.slot_seq[slot] = -1
+        self.finished.append(r)
+
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
@@ -416,6 +427,13 @@ class Engine:
         # sample first token
         nxt = np.asarray(jnp.argmax(logits[:B], axis=-1))
         for i, r in enumerate(admitted):
+            if r.max_new_tokens <= 0:
+                # degenerate prefill-only request: done at prompt end,
+                # no output token to commit (first_token = finish so
+                # downstream TTFT math stays finite)
+                r.first_token = self.clock()
+                self._finish_slot(slot_ids[i], r)
+                continue
             # reserve BEFORE committing the token: on quota overcommit
             # (admission point-checks headroom per request) the token
             # is dropped and decode regenerates it at the same
@@ -423,6 +441,12 @@ class Engine:
             if self.view.append_tokens(seq_ids[i], 1):
                 r.output.append(int(nxt[i]))
                 r.first_token = self.clock()
+                if r.done:
+                    # max_new_tokens == 1: the prefill-committed token
+                    # IS the whole output — finalize here, or a decode
+                    # tick would append a second token past max_new
+                    # and bill a spurious decode step to the timeline
+                    self._finish_slot(slot_ids[i], r)
         return int(lens.sum())
 
     # ------------------------------------------------------------------
@@ -487,11 +511,19 @@ class Engine:
             done_tokens += int(job.clens[i])
             if self._prefilling[sl] >= len(r.prompt):
                 del self._prefilling[sl]
+                if r.max_new_tokens <= 0:
+                    # prefill-only request: finalize at prompt end
+                    r.first_token = self.clock()
+                    self._finish_slot(sl, r)
+                    continue
                 # first generated token — same reserve-then-commit as
                 # the unchunked path (decode retries on overcommit)
                 if self.view.append_tokens(r._seq_id, 1):
                     r.output.append(int(nxt[i]))
                     r.first_token = self.clock()
+                    if r.done:
+                        # max_new_tokens == 1 completes at prefill
+                        self._finish_slot(sl, r)
         return done_tokens
 
     def run_chunk_job(self, job: PrefillJob) -> int:
@@ -573,12 +605,7 @@ class Engine:
                     # prefill's first token rolled back on overcommit
                     # and decode regenerated it — TTFT ends here
                     r.first_token = self.clock()
-                r.finish = self.clock()
-                self.view.free_seq(job.seq_ids[i])
-                slot = job.slots[i]
-                self.slots[slot] = None
-                self.slot_seq[slot] = -1
-                self.finished.append(r)
+                self._finish_slot(job.slots[i], r)
             else:
                 ok = self.view.append_tokens(job.seq_ids[i], 1)
                 if ok and r.first_token < 0:

@@ -28,6 +28,19 @@ FCFS/temporal multiplexing (benchmarks/fig9).
 
 ``policy``: "adbs" (paper), "fcfs" (temporal multiplexing baseline),
 "round_robin" (no prefill priority, fixed quotas).
+
+``sm_frac``: per-engine compute shares from the placement optimizer
+(Alg. 2's candidates).  When given, the scheduler *enforces* them —
+the runtime twin of the paper's MPS SM-percentage assignment
+(DESIGN.md §11): decode jobs are dispatched first under their planned
+shares and prefill chunks fill the residual compute of the tick
+(Fig. 4's dispatch order), every tick is metered per engine and per
+phase (``tick_prefill_by`` / ``tick_decode_by``), and the
+deterministic clock (``serving/driver.TickCostModel.tick_dt``)
+charges each phase by ``tokens / (devices × effective_share)`` with
+roofline flatness and oversubscription contention.  Without shares
+the unit keeps the legacy temporal accounting (every job charged as
+if it took the whole mesh in turn).
 """
 from __future__ import annotations
 
@@ -128,11 +141,13 @@ class FusedGroup:
         for e in self.engines:
             e.materialize_private()
 
-    def decode(self, jobs) -> int:
+    def decode(self, jobs) -> Dict[str, int]:
         """Run one fused decode step.  ``jobs`` is aligned with
         ``self.engines`` (None where an engine has no decode work this
         tick — its rows are padded and masked, since the stacked param
-        tree always carries every group member).  Returns #tokens."""
+        tree always carries every group member).  Returns committed
+        #tokens per member name (the scheduler's per-phase share
+        metering needs the split, not just the sum)."""
         pool = self.engines[0].pool
         rows = self.rows
         toks = np.zeros((len(self.engines), rows), np.int32)
@@ -147,19 +162,20 @@ class FusedGroup:
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             pool.k, pool.v, jnp.asarray(tables))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))        # [M, rows]
-        total = 0
+        per: Dict[str, int] = {}
         for m, (eng, job) in enumerate(zip(self.engines, jobs)):
             if job is not None:
-                total += eng.apply_decode_result(job, nxt[m, :len(job)])
-        return total
+                per[eng.cfg.name] = eng.apply_decode_result(
+                    job, nxt[m, :len(job)])
+        return per
 
-    def prefill(self, jobs) -> int:
+    def prefill(self, jobs) -> Dict[str, int]:
         """Run one fused chunked-prefill sweep: every member's in-flight
         prompt chunks advance by one window in ONE jitted step.
         ``jobs`` is aligned with ``self.engines`` (None where a member
         has nothing prefilling — its rows are padded: −1 tables drop
         the KV writes, zero chunk lengths mark the logits dead).
-        Returns #prompt tokens processed."""
+        Returns #prompt tokens processed per member name."""
         pool = self.engines[0].pool
         rows, C, M = self.rows, self.chunk_tokens, len(self.engines)
         toks = np.zeros((M, rows, C), np.int32)
@@ -179,11 +195,12 @@ class FusedGroup:
             self.params, jnp.asarray(toks), jnp.asarray(offs),
             jnp.asarray(clens), pool.k, pool.v, jnp.asarray(tables))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))        # [M, rows]
-        total = 0
+        per: Dict[str, int] = {}
         for m, (eng, job) in enumerate(zip(self.engines, jobs)):
             if job is not None:
-                total += eng.apply_prefill_result(job, nxt[m, :len(job)])
-        return total
+                per[eng.cfg.name] = eng.apply_prefill_result(
+                    job, nxt[m, :len(job)])
+        return per
 
 
 # backwards-compatible name (the group now fuses prefill too)
@@ -208,7 +225,8 @@ class MuxScheduler:
 
     def __init__(self, engines: Dict[str, Engine], pool: UnifiedKVPool,
                  policy: str = "adbs", adapt_every: int = 16,
-                 fused: bool = False, clock=None):
+                 fused: bool = False, clock=None,
+                 sm_frac: Optional[Dict[str, float]] = None):
         self.engines = engines
         self.pool = pool
         self.policy = policy
@@ -219,6 +237,21 @@ class MuxScheduler:
         self._prefill_rr = 0
         self._decode_rr = 0
         self.stats = MuxStats()
+        # per-engine compute shares (placement sm_frac, DESIGN.md §11).
+        # Shares are *enforced* only when the caller supplies them —
+        # hand-built units keep the legacy temporal accounting, and
+        # fcfs (the temporal-multiplexing baseline) never enforces: a
+        # baseline that serves one LLM at a time has no shares to hold.
+        self.sm_frac: Dict[str, float] = {n: 1.0 for n in engines}
+        if sm_frac:
+            self.sm_frac.update({n: float(f) for n, f in sm_frac.items()
+                                 if n in engines})
+        self.enforce_shares = sm_frac is not None and policy != "fcfs"
+        # per-tick, per-engine phase metering (reset every tick): which
+        # engines prefilled/decoded how many tokens — the deterministic
+        # clock's share-aware tick cost reads these
+        self.tick_prefill_by: Dict[str, int] = {}
+        self.tick_decode_by: Dict[str, int] = {}
         # one time domain for every timestamp: the scheduler's clock is
         # pushed onto all engines so Request timelines are coherent
         self.clock = clock if clock is not None else time.perf_counter
@@ -332,20 +365,25 @@ class MuxScheduler:
         assert name in self.engines, name
         eng = self.engines.pop(name)
         queued = list(self.queues.pop(name))
+        self.sm_frac.pop(name, None)
         self._names = list(self.engines)
         self._prefill_rr = self._decode_rr = 0
         self.rebuild_fused_groups()
         return eng, queued
 
-    def add_engine(self, name: str, eng, queued=()) -> None:
+    def add_engine(self, name: str, eng, queued=(),
+                   sm_frac: float = 1.0) -> None:
         """Adopt a migrated engine (and its carried queue) into this
         unit: it joins the tick rotation, inherits the scheduler's
-        clock, and fuses with matching-signature residents."""
+        clock and compute share (``sm_frac``, re-set from the new plan
+        by ``MigrationExecutor.apply_shares``), and fuses with
+        matching-signature residents."""
         assert name not in self.engines, name
         assert eng.pool is self.pool, \
             "migrate the engine's view to this unit's pool first"
         self.engines[name] = eng
         self.queues[name] = deque(queued)
+        self.sm_frac[name] = float(sm_frac)
         eng.clock = self.clock
         self._names = list(self.engines)
         self._prefill_rr = self._decode_rr = 0
@@ -358,6 +396,13 @@ class MuxScheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values()) + sum(
             len(e.active_slots()) for e in self.engines.values())
+
+    # ------------------------------------------------------------------
+    def _meter(self, counter: Dict[str, int], name: str, toks: int) -> None:
+        """Credit one engine's phase tokens for this tick (share-aware
+        clock input; reset at every ``tick``)."""
+        if toks:
+            counter[name] = counter.get(name, 0) + toks
 
     # ------------------------------------------------------------------
     def _pull_batch(self, name: str) -> List[Request]:
@@ -403,6 +448,7 @@ class MuxScheduler:
                 for r in batch:
                     r.prefill_done = self.clock()
                 self.stats.prefill_tokens += toks
+                self._meter(self.tick_prefill_by, name, toks)
                 self._prefill_rr = (self._prefill_rr + i + 1) % n
                 return True
         return False
@@ -432,10 +478,14 @@ class MuxScheduler:
                 # sweep — run its exported job serially (off the SAME
                 # stacked buffers, via its model index)
                 m = next(i for i, j in enumerate(jobs) if j is not None)
-                self.stats.prefill_tokens += \
-                    grp.engines[m].run_chunk_job(jobs[m])
+                toks = grp.engines[m].run_chunk_job(jobs[m])
+                self.stats.prefill_tokens += toks
+                self._meter(self.tick_prefill_by, grp.names[m], toks)
             else:
-                self.stats.prefill_tokens += grp.prefill(jobs)
+                per = grp.prefill(jobs)
+                self.stats.prefill_tokens += sum(per.values())
+                for name, toks in per.items():
+                    self._meter(self.tick_prefill_by, name, toks)
             ran = True
         return ran
 
@@ -455,7 +505,9 @@ class MuxScheduler:
             name = self._names[(self._decode_rr + i) % n]
             eng = self.engines[name]
             if eng.has_decode_work():
-                total += eng.decode()
+                toks = eng.decode()
+                self._meter(self.tick_decode_by, name, toks)
+                total += toks
         self._decode_rr = (self._decode_rr + 1) % max(n, 1)
         return total
 
@@ -472,15 +524,22 @@ class MuxScheduler:
                 # a lone active engine gains nothing from the fused
                 # sweep — run its (already exported) job serially
                 m = next(i for i, j in enumerate(jobs) if j is not None)
-                total += grp.engines[m].decode(jobs[m])
+                toks = grp.engines[m].decode(jobs[m])
+                self._meter(self.tick_decode_by, grp.names[m], toks)
+                total += toks
             else:
-                total += grp.decode(jobs)
+                per = grp.decode(jobs)
+                for name, toks in per.items():
+                    self._meter(self.tick_decode_by, name, toks)
+                total += sum(per.values())
         n = len(self._serial_names)
         for i in range(n):
             name = self._serial_names[(self._decode_rr + i) % n]
             eng = self.engines[name]
             if eng.has_decode_work():
-                total += eng.decode()
+                toks = eng.decode()
+                self._meter(self.tick_decode_by, name, toks)
+                total += toks
         self._decode_rr = (self._decode_rr + 1) % max(n, 1)
         return total
 
@@ -518,13 +577,30 @@ class MuxScheduler:
         * ``fcfs`` — temporal-multiplexing baseline (AlpaServe-style):
           strict global arrival order, one LLM at a time, no quotas
           (``UnitSim._round_temporal``).
+
+        With ``enforce_shares`` the adbs branch flips its intra-tick
+        phase order: decode jobs are dispatched FIRST, each under its
+        planned ``sm_frac``, and prefill chunks fill the residual
+        compute afterwards — the paper's Fig.-4 dispatch (decode jobs
+        hold their small SM shares, prefill takes the rest) and the
+        order the share-aware clock assumes when it computes the
+        residual share from the tick's decode set (DESIGN.md §11).
         """
         self.stats.ticks += 1
+        self.tick_prefill_by = {}
+        self.tick_decode_by = {}
         if self.policy == "adbs":
-            self._run_prefill()
-            # decode jobs fill the remaining resources: one fused
-            # multi-LLM sweep when fused=True, back-to-back otherwise
-            self.stats.decode_tokens += self._decode_tick()
+            if self.enforce_shares:
+                # decode under the planned shares first; prefill fills
+                # the residual compute of the tick
+                self.stats.decode_tokens += self._decode_tick()
+                self._run_prefill()
+            else:
+                self._run_prefill()
+                # decode jobs fill the remaining resources: one fused
+                # multi-LLM sweep when fused=True, back-to-back
+                # otherwise
+                self.stats.decode_tokens += self._decode_tick()
             if self.stats.ticks % self.adapt_every == 0:
                 # Alg. 3's adapt_quota_periodically (sim counterpart:
                 # UnitSim._adapt_quotas, same low→high utilization move)
@@ -545,7 +621,9 @@ class MuxScheduler:
             prefilling = [n for n, e in self.engines.items()
                           if e.has_prefill_work()]
             for name in prefilling:
-                self.stats.prefill_tokens += self.engines[name].prefill([])
+                toks = self.engines[name].prefill([])
+                self.stats.prefill_tokens += toks
+                self._meter(self.tick_prefill_by, name, toks)
             active = [n for n, e in self.engines.items()
                       if e.has_decode_work()]
             oldest_name, oldest_t = None, float("inf")
@@ -571,9 +649,13 @@ class MuxScheduler:
                     now = self.clock()
                     for r in batch:
                         r.prefill_done = now
-                    self.stats.prefill_tokens += eng.prefill(batch)
+                    toks = eng.prefill(batch)
+                    self.stats.prefill_tokens += toks
+                    self._meter(self.tick_prefill_by, oldest_name, toks)
             for name in active:
-                self.stats.decode_tokens += self.engines[name].decode()
+                toks = self.engines[name].decode()
+                self.stats.decode_tokens += toks
+                self._meter(self.tick_decode_by, name, toks)
         else:
             raise ValueError(self.policy)
         self._harvest()

@@ -18,7 +18,10 @@ plane that closes the loop at runtime:
     loop over the FIXED physical meshes) on the live estimates, then
     diffs old vs new plans into a minimal migration schedule: engine
     moves between meshes, fused-group membership changes (implied by
-    the moves), and per-unit quota rebalances.
+    the moves), and per-unit quota rebalances + compute-share
+    (``sm_frac``) re-assignments — the latter two execute even when
+    the move schedule is empty (a share-only re-plan is a real
+    reconfiguration, applied in place by the executor).
   * **MigrationExecutor** — executes the schedule without dropping a
     single request: in-flight decodes *carry* their KV (logical
     blocks exported, pages copied into the destination pool, block
@@ -207,13 +210,23 @@ def _return_spec(pl: Placement, name: str, mesh_id: int) -> None:
             m.specs.append(spec)
 
 
+def shares_of(pl: Placement) -> Dict[str, float]:
+    """LLM name → planned compute share (sm_frac)."""
+    return {s.name: float(s.sm_frac) for m in pl.meshes for s in m.specs}
+
+
 def diff_placements(old: Placement, new: Placement
                     ) -> List[Tuple[str, int, int]]:
     """Minimal migration schedule between two plans over the same
     meshes: one ``(name, src_mesh, dst_mesh)`` move per LLM whose
-    assignment changed.  Quota/sm_frac rebalances and fused-group
-    membership changes are implied (the executor rebalances every
-    destination unit and group membership follows the moves)."""
+    assignment changed.  A re-plan that changes only quotas and/or
+    ``sm_frac`` diffs to an EMPTY move schedule — that is not a no-op:
+    the executor's ``execute`` pass always rebalances every unit's
+    quotas (∝ the new rates) and applies the new compute shares
+    (``apply_shares``), and the controller records a ``ReconfigEvent``
+    whenever either actually changed, so share-only re-plans execute
+    instead of being silently dropped.  Fused-group membership changes
+    stay implied by the moves."""
     a0, a1 = assignment_of(old), assignment_of(new)
     return [(n, a0[n], a1[n])
             for n in a0 if n in a1 and a1[n] != a0[n]]
@@ -235,6 +248,7 @@ class ReconfigEvent:
                                            # dissolved groups' grants
     dt_charged: float                      # modeled stall (logical s)
     stall_ticks: int                       # dt in base-tick units
+    share_moved: float = 0.0               # Σ|Δsm_frac| applied
     rate_estimates: Dict[str, float] = field(default_factory=dict)
     token_estimates: Dict[str, float] = field(default_factory=dict)
 
@@ -244,6 +258,7 @@ class ReconfigEvent:
                 "migrated_blocks": self.migrated_blocks,
                 "requeued": self.requeued,
                 "quota_moved": self.quota_moved,
+                "share_moved": self.share_moved,
                 "shrunk_blocks": self.shrunk_blocks,
                 "dt_charged": self.dt_charged,
                 "stall_ticks": self.stall_ticks,
@@ -287,6 +302,7 @@ class MigrationExecutor:
         source mesh), so the stored plan keeps matching reality and a
         later window can retry once space frees."""
         migrated = requeued = shrunk = 0
+        new_shares = shares_of(new_pl)
         executed: List[Tuple[str, int, int]] = []
         skipped: List[Tuple[str, int, int]] = []
         for name, src_id, dst_id in moves:
@@ -316,13 +332,18 @@ class MigrationExecutor:
                 _return_spec(new_pl, name, src_id)
                 continue
             eng.rebind_view(view)
-            dst.add_engine(name, eng, carried)
+            # the share travels with the engine; apply_shares below
+            # overwrites it with the new plan's candidate
+            dst.add_engine(name, eng, carried,
+                           sm_frac=new_shares.get(name, 1.0))
             executed.append((name, src_id, dst_id))
             migrated += blocks
             requeued += len(evicted)
         quota_moved = self.rebalance_quotas(new_pl)
+        share_moved = self.apply_shares(new_pl)
         return {"migrated_blocks": migrated, "requeued": requeued,
-                "quota_moved": quota_moved, "shrunk_blocks": shrunk,
+                "quota_moved": quota_moved, "share_moved": share_moved,
+                "shrunk_blocks": shrunk,
                 "executed": executed, "skipped": skipped}
 
     def rebalance_quotas(self, pl: Placement) -> int:
@@ -350,6 +371,30 @@ class MigrationExecutor:
                 target = max(int(n_blocks * share), min_quota, view.used)
                 moved += abs(target - view.quota)
                 view.quota = target
+        return moved
+
+    def apply_shares(self, pl: Placement) -> float:
+        """Apply the new plan's per-LLM compute shares (``sm_frac``) to
+        every share-enforcing unit.  The share is scheduler state — no
+        engine or KV moves — so a re-plan that changes ONLY shares
+        executes right here; before this pass existed, such re-plans
+        diffed to an empty move schedule and the 'implied' rebalance
+        silently never happened.  Units built without enforcement
+        (legacy temporal accounting) are left untouched: flipping their
+        charging model mid-run would split one serving run across two
+        cost semantics.  Returns Σ|Δsm_frac| applied."""
+        moved = 0.0
+        for m in pl.meshes:
+            unit = self.units.get(m.mesh_id)
+            if unit is None or not getattr(unit, "enforce_shares", False):
+                continue
+            for s in m.specs:
+                if s.name not in unit.engines:
+                    continue
+                old = unit.sm_frac.get(s.name, 1.0)
+                if abs(float(s.sm_frac) - old) > 1e-12:
+                    moved += abs(float(s.sm_frac) - old)
+                    unit.sm_frac[s.name] = float(s.sm_frac)
         return moved
 
 
@@ -442,10 +487,13 @@ class ReconfigController:
         self.placement = new_pl
         self.monitor.rebase(est)
         self._last_t = now
-        if not stats["executed"] and stats["quota_moved"] == 0:
+        if not stats["executed"] and stats["quota_moved"] == 0 \
+                and stats["share_moved"] < 1e-9:
             # the live estimates re-derive the current layout (or every
             # move was skipped for lack of destination space) — the
-            # rebase above absorbs the drift, nothing executed
+            # rebase above absorbs the drift, nothing executed.  A
+            # share-only or quota-only rebalance (empty move schedule)
+            # IS an execution and records an event below.
             return None
         dt = self.migration_cost.dt(stats["migrated_blocks"])
         ev = ReconfigEvent(
@@ -453,6 +501,7 @@ class ReconfigController:
             migrated_blocks=stats["migrated_blocks"],
             requeued=stats["requeued"],
             quota_moved=stats["quota_moved"],
+            share_moved=stats["share_moved"],
             shrunk_blocks=stats["shrunk_blocks"],
             dt_charged=dt,
             stall_ticks=int(math.ceil(dt / max(self.tick_base, 1e-9))),

@@ -408,6 +408,38 @@ def test_controller_deterministic_reproducible():
     assert a.rate_estimates == b.rate_estimates
 
 
+def test_share_only_replan_executes():
+    """A re-plan that changes ONLY sm_frac (same assignment, same
+    rates) diffs to an empty move schedule — it must still execute:
+    the executor applies the new shares to the destination units and
+    the event reports a nonzero Σ|Δsm_frac| (before the fix the
+    'implied' rebalance silently never happened)."""
+    from dataclasses import replace as dc_replace
+
+    from repro.serving.reconfig import MigrationExecutor, shares_of
+
+    pl = _shift_placement()
+    for m in pl.meshes:                    # plan with enforced shares
+        for s in m.specs:
+            s.sm_frac = 0.5
+    units = units_from_placement(pl, pool_blocks=12_000, max_slots=2,
+                                 chunk_tokens=16, seed=0, policy="adbs",
+                                 fused=True)
+    ex = MigrationExecutor({u.mesh_id: u for u in units})
+    new_pl = Placement([Mesh(m.mesh_id, m.n_devices,
+                             [dc_replace(s, sm_frac=0.2 if s.name == "llm0"
+                                         else s.sm_frac)
+                              for s in m.specs])
+                        for m in pl.meshes], pl.total_tpt)
+    assert diff_placements(pl, new_pl) == []
+    stats = ex.execute([], new_pl)
+    assert stats["share_moved"] == pytest.approx(0.3)
+    assert units[0].sm_frac["llm0"] == pytest.approx(0.2)
+    assert shares_of(new_pl)["llm0"] == pytest.approx(0.2)
+    # a second pass is idempotent: nothing left to move
+    assert ex.execute([], new_pl)["share_moved"] == 0.0
+
+
 def test_static_report_still_exposes_estimates():
     """Drift is visible in every report, reconfig enabled or not."""
     wl, rep = _serve_shift(reconfig=False)

@@ -1,0 +1,253 @@
+"""Runtime sm_frac enforcement (DESIGN.md §11): the share-aware
+deterministic clock (``TickCostModel.tick_dt``), solo-reference edge
+cases against actual solo runs, the placement → runtime share
+threading, and sim↔runtime throughput-ordering parity for a shared
+placement + shares."""
+import pytest
+
+from repro import configs
+from repro.config import replace
+from repro.core.estimator import LLMSpec
+from repro.core.placement import Mesh, Placement
+from repro.core.simulator import simulate
+from repro.core.workload import synthesize
+from repro.serving.driver import (TickCostModel, build_unit_from_specs,
+                                  serve_requests, serve_workload,
+                                  units_from_placement)
+from repro.serving.engine import Request
+
+COST = TickCostModel()
+
+
+# ---------------------------------------------------------------------------
+# share-aware tick cost (TickCostModel.tick_dt)
+# ---------------------------------------------------------------------------
+def test_tick_dt_solo_full_share_matches_legacy():
+    """A solo full-share engine must charge exactly the legacy
+    temporal dt for every phase mix — share enforcement cannot change
+    the meaning of a dedicated unit's clock (and the analytic solo
+    reference stays consistent with actual solo runs)."""
+    sh = {"m": 1.0}
+    # prefill-only, decode-only, and mixed ticks
+    assert COST.tick_dt({"m": 32}, {}, sh) == pytest.approx(COST.dt(32, 0))
+    assert COST.tick_dt({}, {"m": 4}, sh) == pytest.approx(COST.dt(0, 4))
+    assert COST.tick_dt({"m": 32}, {"m": 4}, sh) \
+        == pytest.approx(COST.dt(32, 4))
+    # device scaling applies to the per-token cost only
+    assert COST.tick_dt({"m": 32}, {"m": 4}, sh, devices=4) \
+        == pytest.approx(COST.dt(32, 4, devices=4))
+
+
+def test_tick_dt_decode_overlap_beats_temporal():
+    """Colocated decode jobs under planned shares overlap (Eq. 3's
+    max over decode times) instead of serializing — the tick must be
+    strictly cheaper than the legacy temporal charge, and never
+    cheaper than the slowest single decode job."""
+    shares = {"a": 0.5, "b": 0.3, "c": 0.2}
+    dec = {"a": 4, "b": 4, "c": 4}
+    pre = {"a": 16, "b": 16, "c": 16}
+    spatial = COST.tick_dt(pre, dec, shares)
+    temporal = COST.dt(sum(pre.values()), sum(dec.values()))
+    assert spatial < temporal
+    slowest = max(COST.phase_time(t, COST.decode_tok, COST.rho_decode,
+                                  shares[n]) for n, t in dec.items())
+    assert spatial >= COST.base + slowest - 1e-12
+
+
+def test_tick_dt_small_share_pays_roofline_penalty():
+    """Below the decode compute intensity the 1/share scaling bites:
+    a tiny share decodes strictly slower, and monotonically so."""
+    t = [COST.tick_dt({}, {"m": 8}, {"m": f}) for f in (1.0, 0.3, 0.1, 0.05)]
+    assert t[0] == pytest.approx(t[1])          # memory-bound: flat
+    assert t[1] < t[2] < t[3]                    # compute-bound: 1/f
+
+
+def test_tick_dt_oversubscription_normalizes_shares():
+    """Shares summing past 1 cannot buy more than the mesh has: six
+    colocated full-share decode jobs are charged exactly like an
+    honest 1/6-each split, and the contention-normalized shares pay
+    the sub-rho roofline penalty a lone full-share job does not."""
+    dec = {n: 8 for n in "abcdef"}
+    over = COST.tick_dt({}, dec, {n: 1.0 for n in dec})
+    fair = COST.tick_dt({}, dec, {n: 1 / 6 for n in dec})
+    assert over == pytest.approx(fair)
+    solo = COST.tick_dt({}, {"a": 8}, {"a": 1.0})
+    assert over > solo, "oversubscription is not free"
+
+
+def test_tick_dt_prefill_fills_residual_share():
+    """With small decode shares the prefill phase overlaps into the
+    residual compute: the tick charges max(prefill, decode) instead of
+    their sum; with full decode shares it falls back to the serial
+    dispatch (never worse than legacy)."""
+    pre, dec = {"p": 64}, {"d": 2}
+    small = COST.tick_dt(pre, dec, {"p": 0.5, "d": 0.2})
+    t_d = COST.phase_time(2, COST.decode_tok, COST.rho_decode, 0.2)
+    t_p_serial = COST.phase_time(64, COST.prefill_tok, COST.rho_prefill, 1.0)
+    assert small < COST.base + t_p_serial + t_d  # overlap won
+    full = COST.tick_dt(pre, dec, {"p": 1.0, "d": 1.0})
+    assert full == pytest.approx(COST.base + t_p_serial
+                                 + COST.phase_time(2, COST.decode_tok,
+                                                   COST.rho_decode, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# solo reference vs actual solo deterministic runs (edge cases)
+# ---------------------------------------------------------------------------
+def _solo_run(arch: str, prompt_len: int, max_new: int,
+              chunk_tokens: int = 16):
+    unit = build_unit_from_specs([("solo", arch, 1.0)], pool_blocks=4_096,
+                                 max_slots=2, chunk_tokens=chunk_tokens,
+                                 seed=0, policy="adbs")
+    req = Request(0, "solo", list(range(1, prompt_len + 1)), max_new,
+                  arrival=0.0)
+    rep = serve_requests([unit], [req], slo_scales=(1.0,), cost=COST)
+    return req, rep
+
+
+def test_solo_reference_prompt_exact_chunk_multiple():
+    """prompt_len an exact multiple of chunk_tokens: ceil has no slack
+    to hide an off-by-one chunk tick.  The actual solo E2E matches the
+    analytic reference to within the final tick (timestamps are
+    stamped before the tick's cost is charged)."""
+    ref = COST.solo_reference(32, 4, chunk_tokens=16)
+    assert ref == pytest.approx(
+        (2 + 3) * COST.base + 32 * COST.prefill_tok + 3 * COST.decode_tok)
+    req, rep = _solo_run("qwen2-7b", 32, 4)
+    assert len(req.output) == 4
+    e2e = req.finish - req.arrival
+    assert 0.0 <= ref - e2e <= 2 * (COST.base + COST.decode_tok) + 1e-9
+    assert rep.per_llm["solo"].attainment[1.0] == 1.0
+
+
+def test_solo_reference_output_len_one():
+    """output_len == 1: the single output token is committed by the
+    prefill tick itself — no decode tick is billed, and the engine
+    must emit exactly one token (not one-plus-a-spurious-decode)."""
+    ref = COST.solo_reference(32, 1, chunk_tokens=16)
+    assert ref == pytest.approx(2 * COST.base + 32 * COST.prefill_tok)
+    req, rep = _solo_run("qwen2-7b", 32, 1)
+    assert len(req.output) == 1, \
+        "a max_new_tokens=1 request must finish at prefill"
+    e2e = req.finish - req.arrival
+    assert 0.0 <= ref - e2e <= COST.base + 16 * COST.prefill_tok + 1e-9
+    assert rep.per_llm["solo"].attainment[1.0] == 1.0
+
+
+def test_solo_reference_output_len_zero():
+    """output_len == 0 (prefill-only probe): the reference bills only
+    prefill ticks and prompt tokens, and the engine finalizes the
+    request at prompt end without committing any token."""
+    ref = COST.solo_reference(32, 0, chunk_tokens=16)
+    assert ref == pytest.approx(2 * COST.base + 32 * COST.prefill_tok)
+    req, rep = _solo_run("qwen2-7b", 32, 0)
+    assert req.output == []
+    assert req.finish >= 0 and req.first_token >= 0
+    assert rep.per_llm["solo"].attainment[1.0] == 1.0
+
+
+def test_solo_reference_whole_prompt_prefill():
+    """chunk_tokens=None: one prefill tick regardless of prompt
+    length (the unchunked engine path)."""
+    ref = COST.solo_reference(48, 3, chunk_tokens=None)
+    assert ref == pytest.approx(
+        (1 + 2) * COST.base + 48 * COST.prefill_tok + 2 * COST.decode_tok)
+    req, rep = _solo_run("qwen2-7b", 48, 3, chunk_tokens=0)
+    assert len(req.output) == 3
+    e2e = req.finish - req.arrival
+    assert 0.0 <= ref - e2e <= 2 * (COST.base + COST.decode_tok) + 1e-9
+    assert rep.per_llm["solo"].attainment[1.0] == 1.0
+
+
+def test_solo_reference_ssm_engine():
+    """An SSM engine (no paged KV, state-carry chunked prefill) meters
+    the same token counts, so the shared reference applies unchanged."""
+    req, rep = _solo_run("mamba2-2.7b", 32, 4)
+    assert len(req.output) == 4
+    ref = COST.solo_reference(32, 4, chunk_tokens=16)
+    e2e = req.finish - req.arrival
+    assert 0.0 <= ref - e2e <= 2 * (COST.base + COST.decode_tok) + 1e-9
+    assert rep.per_llm["solo"].attainment[1.0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# placement → runtime share threading
+# ---------------------------------------------------------------------------
+def _shared_plan():
+    cfg = configs.get("qwen2-7b")
+
+    def spec(name, rate, f):
+        return LLMSpec(replace(cfg, name=name), rate, mean_prompt=16,
+                       mean_output=6, tp=1, sm_frac=f, arch="qwen2-7b")
+
+    return Placement(
+        meshes=[Mesh(0, 4, [spec("hot", 12.0, 0.5), spec("mid", 6.0, 0.3),
+                            spec("cold", 3.0, 0.2)])],
+        total_tpt=21.0)
+
+
+def test_units_consume_plan_shares():
+    """units_from_placement must thread each spec's sm_frac into its
+    unit (the runtime used to drop it on the floor) and the resulting
+    report must surface the shares it actually ran."""
+    pl = _shared_plan()
+    (u,) = units_from_placement(pl, pool_blocks=12_000, max_slots=2,
+                                chunk_tokens=16, fused=True)
+    assert u.enforce_shares
+    assert u.sm_frac == {"hot": 0.5, "mid": 0.3, "cold": 0.2}
+    # the temporal baseline arm builds the same unit without shares
+    (t,) = units_from_placement(pl, pool_blocks=12_000, max_slots=2,
+                                chunk_tokens=16, fused=True,
+                                enforce_shares=False)
+    assert not t.enforce_shares
+    assert t.sm_frac == {"hot": 1.0, "mid": 1.0, "cold": 1.0}
+
+
+def test_report_surfaces_shares():
+    pl = _shared_plan()
+    wl = synthesize(["hot", "mid", "cold"], alpha=2.1, max_rate=6.0,
+                    horizon=1.0, seed=0, mean_prompt=16, mean_output=6,
+                    max_len=64)
+    units = units_from_placement(pl, pool_blocks=12_000, max_slots=4,
+                                 chunk_tokens=16, fused=True)
+    rep = serve_workload(units, wl, seed=1, slo_scales=(2.0,), cost=COST)
+    assert rep.sm_frac == {"hot": 0.5, "mid": 0.3, "cold": 0.2}
+    assert "sm_frac" in rep.summary()
+    assert rep.to_json()["sm_frac"]["hot"] == 0.5
+
+
+def test_realtime_rejects_reconfig():
+    """Wall-clock serving calibrates solo-probe SLO references once at
+    startup; combining it with live reconfiguration must fail loudly
+    instead of serving stale references after a migration."""
+    from repro.serving.reconfig import ReconfigController
+    pl = _shared_plan()
+    units = units_from_placement(pl, pool_blocks=12_000, max_slots=2,
+                                 chunk_tokens=16)
+    ctrl = ReconfigController(pl, units)
+    with pytest.raises(ValueError, match="deterministic"):
+        serve_requests(units, [], cost=None, warm=False, reconfig=ctrl)
+
+
+# ---------------------------------------------------------------------------
+# sim ↔ runtime parity
+# ---------------------------------------------------------------------------
+def test_runtime_throughput_ordering_matches_simulator():
+    """For one shared placement (same shares, rates and trace), the
+    runtime's per-LLM throughput ordering must match the discrete-event
+    simulator's — the deterministic clock's share accounting and the
+    sim's Eq.-3 rounds are two views of one model, not two models."""
+    pl = _shared_plan()
+    names = ["hot", "mid", "cold"]
+    wl = synthesize(names, alpha=2.1, max_rate=16.0, horizon=2.0, seed=0,
+                    mean_prompt=16, mean_output=6, max_len=128)
+    sim = simulate(pl, wl, mode="spatial-temporal", policy="adbs")
+    assert set(sim.per_llm_tpt) == set(names)
+    units = units_from_placement(pl, pool_blocks=20_000, max_slots=4,
+                                 chunk_tokens=16, fused=True)
+    rep = serve_workload(units, wl, seed=1, slo_scales=(2.0, 4.0),
+                         cost=COST)
+    run_tpt = {n: rep.per_llm[n].throughput for n in names}
+    sim_order = sorted(names, key=lambda n: -sim.per_llm_tpt[n])
+    run_order = sorted(names, key=lambda n: -run_tpt[n])
+    assert sim_order == run_order, (sim.per_llm_tpt, run_tpt)
