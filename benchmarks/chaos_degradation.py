@@ -1,0 +1,164 @@
+"""Chaos harness for the serving loop — the CI gate on *graceful*
+degradation (serving/faults.py, DESIGN.md §12).
+
+Three properties are asserted, all on the deterministic tick-cost
+clock so the gates are bit-reproducible:
+
+  1. **Parity** — the degradation machinery is free when idle: a run
+     with bounded queues + deadline shedding armed and a severity-0
+     (empty) fault plan reproduces the plain baseline's attainment
+     bit-for-bit.
+  2. **Monotone degradation** — a nested severity sweep
+     (``FaultPlan.random``: higher severity strictly adds faults to
+     the same schedule) degrades mean SLO attainment monotonically —
+     no cliffs, no paradoxical improvements — and every run terminates
+     with ``submitted = finished + shed`` (each request disposed of
+     exactly once, never silently lost or duplicated).
+  3. **Overload + crash survival** — a 2× overload burst with an
+     engine crash mid-run, bounded admission queues and deadline
+     shedding: the run terminates, sheds deliberately (recorded,
+     SLO-missed) rather than queuing without bound, and still loses
+     nothing silently.
+
+Records ``experiments/results/chaos_degradation.json`` with the full
+per-severity reports (uploaded by CI next to the other artifacts).
+"""
+from __future__ import annotations
+
+from repro.core.workload import synthesize
+from repro.serving.driver import (TickCostModel, build_unit_from_specs,
+                                  serve_workload)
+from repro.serving.faults import FaultPlan
+
+from benchmarks.common import save
+
+ARCH = "qwen2-7b"
+N_MODELS = 3
+ALPHA = 2.1
+CHUNK_TOKENS = 16
+MAX_SLOTS = 4
+MEAN_PROMPT, MEAN_OUTPUT = 24, 10
+SLO_SCALES = (1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0)
+SEVERITIES = (0.0, 1 / 3, 2 / 3, 1.0)
+COST = TickCostModel()
+
+
+def _unit(names, rates, pool_blocks: int, chaos: bool):
+    """One fused colocated unit; ``chaos`` arms the degradation ladder
+    (bounded queues + deadline shedding) the chaos runs serve under."""
+    return build_unit_from_specs(
+        [(n, ARCH, rates[n]) for n in names], pool_blocks=pool_blocks,
+        max_slots=MAX_SLOTS, chunk_tokens=CHUNK_TOKENS, seed=0,
+        policy="adbs", fused=True,
+        max_queue=(256 if chaos else None),
+        shed_policy=("deadline" if chaos else "none"))
+
+
+def _attainment(rep) -> dict:
+    return {s: rep.aggregate.attainment[s] for s in SLO_SCALES}
+
+
+def _assert_exactly_once(rep, n_requests: int, tag: str) -> None:
+    agg = rep.aggregate
+    assert agg.submitted == n_requests, (tag, agg.submitted, n_requests)
+    assert agg.submitted == agg.finished + agg.shed, \
+        (tag, "every request must finish or be shed — exactly once",
+         agg.submitted, agg.finished, agg.shed)
+    per = rep.per_llm.values()
+    assert sum(p.submitted for p in per) == n_requests, tag
+    assert sum(p.finished + p.shed for p in per) == n_requests, tag
+
+
+def run(quick: bool = False, max_rate: float = 10.0, horizon: float = 4.0,
+        pool_blocks: int = 20_000) -> dict:
+    if quick:
+        max_rate, horizon = 10.0, 3.0
+    names = [f"llm{i}" for i in range(N_MODELS)]
+    wl = synthesize(names, alpha=ALPHA, max_rate=max_rate, horizon=horizon,
+                    seed=0, mean_prompt=MEAN_PROMPT, mean_output=MEAN_OUTPUT,
+                    max_len=256)
+    out = {
+        "arch": ARCH, "n_models": N_MODELS, "alpha": ALPHA,
+        "max_rate": max_rate, "horizon": horizon,
+        "pool_blocks": pool_blocks, "n_requests": len(wl.requests),
+        "rates": wl.rates, "slo_scales": list(SLO_SCALES),
+        "severities": list(SEVERITIES), "runs": {},
+    }
+    print(f"[chaos] {len(wl.requests)} requests, α={ALPHA}, rates "
+          f"{{{', '.join(f'{n}:{r:.2f}' for n, r in wl.rates.items())}}}")
+
+    # ---- gate 1: severity-0 chaos config == plain baseline -----------
+    base = serve_workload([_unit(names, wl.rates, pool_blocks, False)],
+                          wl, seed=1, slo_scales=SLO_SCALES, cost=COST)
+    sev0 = serve_workload(
+        [_unit(names, wl.rates, pool_blocks, True)], wl, seed=1,
+        slo_scales=SLO_SCALES, cost=COST,
+        faults=FaultPlan.random(names, horizon, 0.0, seed=11,
+                                pool_blocks=pool_blocks))
+    out["runs"]["baseline"] = base.to_json()
+    assert _attainment(base) == _attainment(sev0), \
+        ("severity-0 chaos must reproduce the baseline bit-for-bit",
+         _attainment(base), _attainment(sev0))
+    assert base.horizon == sev0.horizon and base.ticks == sev0.ticks
+    assert sev0.faults is not None and sev0.faults.injected == 0
+    print(f"[chaos] parity: severity-0 == baseline "
+          f"({base.ticks} ticks, attainment bit-identical)")
+
+    # ---- gate 2: nested severity sweep degrades monotonically --------
+    means = []
+    for sev in SEVERITIES:
+        plan = FaultPlan.random(names, horizon, sev, seed=11,
+                                pool_blocks=pool_blocks)
+        rep = serve_workload([_unit(names, wl.rates, pool_blocks, True)],
+                             wl, seed=1, slo_scales=SLO_SCALES, cost=COST,
+                             faults=plan)
+        _assert_exactly_once(rep, len(wl.requests), f"severity {sev:.2f}")
+        att = _attainment(rep)
+        mean = sum(att.values()) / len(att)
+        means.append(mean)
+        out["runs"][f"severity_{sev:.2f}"] = rep.to_json()
+        fs = rep.faults
+        print(f"[chaos] severity {sev:.2f}: {len(plan)} faults → "
+              f"{rep.aggregate.finished}/{rep.aggregate.submitted} "
+              f"finished, {rep.aggregate.shed} shed, "
+              f"{fs.recoveries} recoveries, {fs.blocks_lost} blocks "
+              f"lost, mean attainment {mean:.4f}")
+    out["mean_attainment_by_severity"] = means
+    for lo, hi in zip(means[1:], means[:-1]):
+        assert lo <= hi + 1e-9, \
+            ("attainment must degrade monotonically with fault severity "
+             "(nested plans)", means)
+    print(f"[chaos] monotone degradation: {[f'{m:.4f}' for m in means]}")
+
+    # ---- gate 3: 2× overload burst + crash survives ------------------
+    wl2 = synthesize(names, alpha=ALPHA, max_rate=2 * max_rate,
+                     horizon=horizon, seed=2, mean_prompt=MEAN_PROMPT,
+                     mean_output=MEAN_OUTPUT, max_len=256)
+    unit = build_unit_from_specs(
+        [(n, ARCH, wl2.rates[n]) for n in names], pool_blocks=pool_blocks,
+        max_slots=MAX_SLOTS, chunk_tokens=CHUNK_TOKENS, seed=0,
+        policy="adbs", fused=True, max_queue=8, shed_policy="deadline")
+    crash_t = 0.5 * horizon
+    rep = serve_workload(
+        [unit], wl2, seed=1, slo_scales=SLO_SCALES, cost=COST,
+        faults=FaultPlan.parse(f"crash:{names[0]}@{crash_t}"),
+        shed_scale=2.0)
+    _assert_exactly_once(rep, len(wl2.requests), "overload")
+    assert rep.faults.recoveries == 1, rep.faults.to_json()
+    assert rep.aggregate.shed > 0, \
+        "a 2× burst over bounded queues must shed deliberately"
+    out["runs"]["overload_crash"] = rep.to_json()
+    print(f"[chaos] overload+crash: {rep.aggregate.finished} finished, "
+          f"{rep.aggregate.shed} shed "
+          f"({dict(rep.aggregate.shed_reasons)}), zero lost")
+
+    save("chaos_degradation", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.quick)

@@ -37,6 +37,8 @@ from repro.core.workload import poisson_trace, power_law_rates
 from repro.serving.driver import (TickCostModel, build_unit_from_specs,
                                   serve_workload, units_from_placement)
 from repro.serving.engine import TRACE_COUNTS, unique_tree_bytes
+from repro.serving.faults import FaultPlan
+from repro.serving.mux import SHED_POLICIES
 from repro.serving.reconfig import ReconfigController
 
 
@@ -83,6 +85,28 @@ def main() -> int:
                          "(reproducible SLO numbers; DESIGN.md §9)")
     ap.add_argument("--pool-blocks", type=int, default=200_000)
     ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="per-LLM admission-queue bound; arrivals past "
+                         "it are shed with backpressure (needs a "
+                         "--shed-policy other than 'none'; DESIGN.md §12)")
+    ap.add_argument("--shed-policy", default="none",
+                    choices=list(SHED_POLICIES),
+                    help="graceful-degradation ladder: 'none' (never "
+                         "drop), 'reject' (bound the queue), 'deadline' "
+                         "(also shed requests whose solo-speed TTFT "
+                         "can no longer meet the SLO)")
+    ap.add_argument("--shed-scale", type=float, default=None,
+                    help="SLO scale the deadline shedder targets "
+                         "(default: the largest --slo-scales entry)")
+    ap.add_argument("--faults", default=None, metavar="PLAN",
+                    help="fault-injection plan: comma list of "
+                         "crash:<llm>@<t>, block_loss:<llm>:<blocks>@<t>, "
+                         "transient:<llm>:<ticks>@<t>, "
+                         "migration_abort@<t> (deterministic chaos; "
+                         "DESIGN.md §12)")
+    ap.add_argument("--watchdog-ticks", type=int, default=1000,
+                    help="busy ticks with zero progress before the "
+                         "watchdog sheds all pending work (0 disables)")
     ap.add_argument("--sm-frac", default=None, metavar="SHARES",
                     help="per-LLM compute-share overrides: a comma list "
                          "aligned with --archs (e.g. 0.5,0.3,0.2) or "
@@ -116,6 +140,40 @@ def main() -> int:
                     help="estimated/planned rate ratio that arms the "
                          "re-plan trigger (sustained for 2 windows)")
     args = ap.parse_args()
+
+    # ---- scalar sanity (a bad flag should die here, not as an
+    # assertion three layers down in the allocator) ---------------------
+    positive = [("--rate", args.rate), ("--horizon", args.horizon),
+                ("--alpha", args.alpha),
+                ("--pool-blocks", args.pool_blocks),
+                ("--max-slots", args.max_slots),
+                ("--mean-prompt", args.mean_prompt),
+                ("--mean-output", args.mean_output),
+                ("--devices", args.devices),
+                ("--reconfig-interval", args.reconfig_interval),
+                ("--drift-threshold", args.drift_threshold)]
+    for flag, v in positive:
+        if v <= 0:
+            ap.error(f"{flag} must be > 0 (got {v})")
+    nonneg = [("--chunk-tokens", args.chunk_tokens),
+              ("--max-new", args.max_new),
+              ("--watchdog-ticks", args.watchdog_ticks)]
+    for flag, v in nonneg:
+        if v < 0:
+            ap.error(f"{flag} must be >= 0 (got {v})")
+    if args.max_queue is not None and args.max_queue <= 0:
+        ap.error(f"--max-queue must be > 0 (got {args.max_queue})")
+    if args.max_queue is not None and args.shed_policy == "none":
+        ap.error("--max-queue needs --shed-policy reject or deadline "
+                 "('none' never drops, so the bound is unenforceable)")
+    if args.shed_scale is not None and args.shed_scale <= 0:
+        ap.error(f"--shed-scale must be > 0 (got {args.shed_scale})")
+    try:
+        slo_check = tuple(float(s) for s in args.slo_scales.split(","))
+    except ValueError:
+        ap.error(f"--slo-scales could not be parsed: {args.slo_scales!r}")
+    if any(s <= 0 for s in slo_check):
+        ap.error(f"--slo-scales entries must be > 0: {args.slo_scales!r}")
 
     if args.placement and args.save_placement:
         ap.error("--placement and --save-placement are mutually "
@@ -194,7 +252,8 @@ def main() -> int:
             pl, pool_blocks=args.pool_blocks, max_slots=args.max_slots,
             chunk_tokens=args.chunk_tokens, seed=args.seed,
             policy=args.policy, fused=args.fused,
-            enforce_shares=not args.no_enforce_shares)
+            enforce_shares=not args.no_enforce_shares,
+            max_queue=args.max_queue, shed_policy=args.shed_policy)
     else:
         unknown = sorted(set(sm_overrides) - set(names))
         if unknown:
@@ -210,7 +269,30 @@ def main() -> int:
             specs, pool_blocks=args.pool_blocks,
             max_slots=args.max_slots, chunk_tokens=args.chunk_tokens,
             seed=args.seed, policy=args.policy, fused=args.fused,
-            sm_fracs=sm_fracs)]
+            sm_fracs=sm_fracs,
+            max_queue=args.max_queue, shed_policy=args.shed_policy)]
+
+    # ---- fault-injection plan ----------------------------------------
+    fault_plan = None
+    if args.faults:
+        try:
+            fault_plan = FaultPlan.parse(args.faults)
+        except ValueError as e:
+            ap.error(f"--faults could not be parsed: {e}")
+        engine_names = {n for u in units for n in u.engines}
+        unknown = sorted(set(fault_plan.targets()) - engine_names)
+        if unknown:
+            ap.error(f"--faults targets not served here: {unknown} "
+                     f"(engines are {sorted(engine_names)})")
+        if not args.deterministic:
+            print("[serve] note: fault times fire against the wall "
+                  "clock; use --deterministic for reproducible chaos")
+        if any(e.kind == "migration_abort" for e in fault_plan.events) \
+                and not args.reconfig:
+            print("[serve] note: migration_abort faults are inert "
+                  "without --reconfig")
+        print(f"[serve] fault plan armed: {len(fault_plan.events)} "
+              f"event(s), shed_policy={args.shed_policy}")
 
     if args.fused and args.policy == "fcfs":
         # fcfs is the temporal-multiplexing baseline: one LLM at a
@@ -277,7 +359,9 @@ def main() -> int:
     report = serve_workload(units, wl, seed=args.seed,
                             max_new_cap=args.max_new,
                             slo_scales=slo_scales, cost=cost,
-                            reconfig=ctrl)
+                            reconfig=ctrl, faults=fault_plan,
+                            watchdog_ticks=args.watchdog_ticks,
+                            shed_scale=args.shed_scale)
 
     # ---- report ------------------------------------------------------
     agg = report.aggregate
@@ -285,6 +369,15 @@ def main() -> int:
           f"{report.ticks} ticks in {report.wall_s:.1f}s wall")
     for line in report.summary().splitlines():
         print(f"[serve] {line}")
+    if report.faults is not None:
+        for ev in report.faults.log:
+            extra = (f", {ev['stalled_ticks']} stalled ticks"
+                     if ev["kind"] == "watchdog" else
+                     f", target={ev.get('target')}")
+            print(f"[serve] fault @{ev['t']:.2f}s {ev['kind']}: "
+                  f"{ev.get('requeued', 0)} requeued, "
+                  f"{ev.get('shed', 0)} shed, "
+                  f"{ev.get('blocks', 0)} blocks{extra}")
     if report.reconfig is not None:
         for ev in report.reconfig.log:
             moves = ", ".join(f"{n}: mesh{src}→mesh{dst}"

@@ -50,6 +50,8 @@ from repro.core.placement import Placement
 from repro.core.workload import Workload
 from repro.models.transformer import init_params
 from repro.serving.engine import Engine, Request
+from repro.serving.faults import (FaultInjector, FaultPlan,
+                                  RecoveryCostModel)
 from repro.serving.kvcache import UnifiedKVPool
 from repro.serving.mux import MuxScheduler
 from repro.serving.reconfig import ReconfigController, WorkloadMonitor
@@ -319,7 +321,9 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
                           chunk_tokens: int = 0, seed: int = 0,
                           policy: str = "adbs", fused: bool = False,
                           reduced: bool = True,
-                          sm_fracs: Optional[Dict[str, float]] = None
+                          sm_fracs: Optional[Dict[str, float]] = None,
+                          max_queue: Optional[int] = None,
+                          shed_policy: str = "none"
                           ) -> MuxScheduler:
     """Instantiate one real colocated unit from ``(name, arch, rate)``
     triples: one engine per spec over a shared ``UnifiedKVPool``, with
@@ -356,14 +360,17 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
         engines[name] = Engine(cfg, params, view, max_slots=max_slots,
                                chunk_tokens=chunk_tokens or None)
     return MuxScheduler(engines, pool, policy=policy, fused=fused,
-                        sm_frac=sm_fracs)
+                        sm_frac=sm_fracs, max_queue=max_queue,
+                        shed_policy=shed_policy)
 
 
 def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
                          max_slots: int = 4, chunk_tokens: int = 0,
                          seed: int = 0, policy: str = "adbs",
                          fused: bool = False,
-                         enforce_shares: bool = True
+                         enforce_shares: bool = True,
+                         max_queue: Optional[int] = None,
+                         shed_policy: str = "none"
                          ) -> List[MuxScheduler]:
     """The placement → runtime bridge: one real unit per non-empty mesh
     of an optimizer plan (group membership = the mesh's LLM set, fused
@@ -390,7 +397,8 @@ def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
             unit_specs, pool_blocks=blocks, max_slots=max_slots,
             chunk_tokens=chunk_tokens, seed=seed + m.mesh_id,
             policy=policy, fused=fused,
-            sm_fracs=(sm if enforce_shares else None))
+            sm_fracs=(sm if enforce_shares else None),
+            max_queue=max_queue, shed_policy=shed_policy)
         # mesh identity for the reconfiguration subsystem + mesh size
         # for the deterministic clock's per-unit tick scaling
         u.mesh_id = m.mesh_id
@@ -436,6 +444,15 @@ class LLMReport:
     e2e: LatencyStats
     attainment: Dict[float, float] = field(default_factory=dict)
     goodput: Dict[float, float] = field(default_factory=dict)
+    # degradation dispositions (DESIGN.md §12), visible in EVERY run:
+    #   shed      — deliberately dropped (backpressure, deadline,
+    #               requeue budget, watchdog); SLO-missed, never silent
+    #   retried   — survived ≥1 fault/recovery teardown and requeue
+    #   recovered — retried AND still finished
+    shed: int = 0
+    retried: int = 0
+    recovered: int = 0
+    shed_reasons: Dict[str, int] = field(default_factory=dict)
 
     def to_json(self) -> dict:
         return {"name": self.name, "submitted": self.submitted,
@@ -443,7 +460,10 @@ class LLMReport:
                 "ttft": self.ttft.to_json(), "tpot": self.tpot.to_json(),
                 "e2e": self.e2e.to_json(),
                 "attainment": {str(k): v for k, v in self.attainment.items()},
-                "goodput": {str(k): v for k, v in self.goodput.items()}}
+                "goodput": {str(k): v for k, v in self.goodput.items()},
+                "shed": self.shed, "retried": self.retried,
+                "recovered": self.recovered,
+                "shed_reasons": dict(self.shed_reasons)}
 
 
 @dataclass
@@ -484,6 +504,34 @@ class ReconfigSummary:
 
 
 @dataclass
+class FaultSummary:
+    """Fault-injection/degradation section of a ``ServeReport``
+    (serving/faults.py; DESIGN.md §12): what the plan fired, what the
+    runtime did to survive it, and what the recoveries cost on the
+    deterministic clock."""
+    injected: int = 0            # plan events that fired
+    unfired: int = 0             # plan events that never fired
+    recoveries: int = 0          # engine rebuilds (crash + escalation)
+    block_losses: int = 0
+    migration_aborts: int = 0
+    watchdog_trips: int = 0
+    requeued: int = 0            # requests torn down and requeued
+    blocks_lost: int = 0         # arena head-blocks lost to block_loss
+    dt_charged: float = 0.0      # modeled recovery stall (logical s)
+    log: List[dict] = field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {"injected": self.injected, "unfired": self.unfired,
+                "recoveries": self.recoveries,
+                "block_losses": self.block_losses,
+                "migration_aborts": self.migration_aborts,
+                "watchdog_trips": self.watchdog_trips,
+                "requeued": self.requeued,
+                "blocks_lost": self.blocks_lost,
+                "dt_charged": self.dt_charged, "log": self.log}
+
+
+@dataclass
 class ServeReport:
     horizon: float                           # clock time at last finish
     wall_s: float                            # real wall time (diagnostic)
@@ -501,6 +549,7 @@ class ServeReport:
     # sm_frac): the plan's shares as the runtime actually ran them
     sm_frac: Dict[str, float] = field(default_factory=dict)
     reconfig: Optional[ReconfigSummary] = None
+    faults: Optional[FaultSummary] = None
 
     def summary(self) -> str:
         a = self.aggregate
@@ -513,13 +562,21 @@ class ServeReport:
                  f"p99={a.ttft.p99:.3f}s | TPOT p50={a.tpot.p50 * 1e3:.1f}ms "
                  f"p99={a.tpot.p99 * 1e3:.1f}ms | E2E p50={a.e2e.p50:.2f}s "
                  f"p99={a.e2e.p99:.2f}s"]
+        lines.append(f"aggregate: shed={a.shed} retried={a.retried} "
+                     f"recovered={a.recovered}"
+                     + (f" (shed by: "
+                        + ", ".join(f"{k}={v}" for k, v
+                                    in sorted(a.shed_reasons.items()))
+                        + ")" if a.shed_reasons else ""))
         for name, r in self.per_llm.items():
             att = ", ".join(f"{s:g}×:{r.attainment[s]:.0%}"
                             for s in self.slo_scales)
             lines.append(f"{name}: {r.finished}/{r.submitted} "
                          f"ttft_p99={r.ttft.p99:.3f}s "
                          f"tpot_p99={r.tpot.p99 * 1e3:.1f}ms "
-                         f"e2e_p99={r.e2e.p99:.2f}s | SLO[{att}]")
+                         f"e2e_p99={r.e2e.p99:.2f}s | SLO[{att}] | "
+                         f"shed={r.shed} retried={r.retried} "
+                         f"recovered={r.recovered}")
         if self.rate_estimates:
             pairs = ", ".join(
                 f"{n}:{self.rate_estimates[n]:.2f}"
@@ -539,6 +596,17 @@ class ServeReport:
                 f"Σ|Δsm_frac|={r.share_moved:.2f}, "
                 f"{r.stall_ticks} stall ticks "
                 f"({r.dt_charged * 1e3:.1f}ms charged)")
+        if self.faults is not None:
+            f = self.faults
+            lines.append(
+                f"faults: {f.injected} injected ({f.unfired} unfired) → "
+                f"{f.recoveries} engine recoveries, "
+                f"{f.block_losses} block losses "
+                f"({f.blocks_lost} head-blocks), "
+                f"{f.migration_aborts} migration aborts, "
+                f"{f.watchdog_trips} watchdog trips | "
+                f"{f.requeued} requeued "
+                f"({f.dt_charged * 1e3:.1f}ms charged)")
         return "\n".join(lines)
 
     def to_json(self) -> dict:
@@ -551,7 +619,9 @@ class ServeReport:
                 "rate_estimates": dict(self.rate_estimates),
                 "sm_frac": dict(self.sm_frac),
                 "reconfig": (self.reconfig.to_json()
-                             if self.reconfig else None)}
+                             if self.reconfig else None),
+                "faults": (self.faults.to_json()
+                           if self.faults else None)}
 
 
 def _roll_up(name: str, reqs: List[Request], horizon: float,
@@ -570,11 +640,21 @@ def _roll_up(name: str, reqs: List[Request], horizon: float,
                  <= s * ref(r.model, len(r.prompt), r.max_new_tokens))
         att[s] = ok / max(len(reqs), 1)
         goodput[s] = ok / max(horizon, 1e-9)
+    shed_reasons: Dict[str, int] = {}
+    for r in reqs:
+        if r.shed:
+            shed_reasons[r.shed_reason] = \
+                shed_reasons.get(r.shed_reason, 0) + 1
+    retried = [r for r in reqs if r.requeues > 0]
     return LLMReport(name=name, submitted=len(reqs), finished=len(fin),
                      throughput=len(fin) / max(horizon, 1e-9),
                      ttft=LatencyStats.of(ttfts), tpot=LatencyStats.of(tpots),
                      e2e=LatencyStats.of(e2es), attainment=att,
-                     goodput=goodput)
+                     goodput=goodput,
+                     shed=sum(1 for r in reqs if r.shed),
+                     retried=len(retried),
+                     recovered=sum(1 for r in retried if r.finish >= 0),
+                     shed_reasons=shed_reasons)
 
 
 # ---------------------------------------------------------------------------
@@ -643,7 +723,11 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                    warm: bool = True,
                    max_ticks: int = 500_000,
                    planned_rates: Optional[Dict[str, float]] = None,
-                   reconfig: Optional[ReconfigController] = None
+                   reconfig: Optional[ReconfigController] = None,
+                   faults=None,
+                   recovery_cost: Optional[RecoveryCostModel] = None,
+                   watchdog_ticks: int = 1000,
+                   shed_scale: Optional[float] = None
                    ) -> ServeReport:
     """Drive real units through an arrival-ordered request list and
     roll the ``Request`` timelines up into a ``ServeReport``.
@@ -665,6 +749,27 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     arrivals, calls ``step`` each iteration, charges executed events'
     modeled stall to the logical clock (deterministic mode) and
     refreshes request routing after engine moves.
+
+    Graceful degradation (DESIGN.md §12).  ``faults`` (a ``FaultPlan``
+    or ``FaultInjector``) arms fault injection: the injector is
+    threaded onto every unit (polled at each tick) and onto the
+    reconfig executor (asked before each page copy).  Units record
+    their recovery events in ``MuxScheduler.fault_events``; the loop
+    drains them each iteration and — in deterministic mode — charges
+    ``recovery_cost.dt(requeued, blocks)`` to the logical clock, the
+    fault-handling twin of reconfig's ``dt_charged``.  When a unit
+    runs ``shed_policy="deadline"``, every request it owns is stamped
+    with its admission deadline ``arrival + (s − 1)·ttft_ref`` (s =
+    ``shed_scale``, default ``max(slo_scales)``; ``ttft_ref`` = the
+    solo TTFT reference, i.e. ``ref(model, prompt_len, 0)``): past
+    that instant even immediate solo-speed prefill misses the s-scaled
+    TTFT target, so carrying the request could only add misses.  The
+    watchdog converts a would-be infinite stall (``watchdog_ticks``
+    consecutive busy ticks with zero progress — no tokens, finishes or
+    sheds) into a recorded degradation event: every queued and
+    in-flight request is shed, so the loop terminates with
+    ``submitted = finished + shed`` instead of hanging.
+    ``watchdog_ticks=0`` disables it.
 
     CAVEAT (realtime + multiple units): units are ticked sequentially
     on one host thread under ONE wall clock, so each mesh's latencies
@@ -709,6 +814,34 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
         for eng in u.engines.values():
             eng.clock = clock
 
+    # fault injection: one injector serves every unit and the
+    # migration executor; recovery stalls are priced like any tick
+    injector: Optional[FaultInjector] = None
+    if faults is not None:
+        injector = (faults if isinstance(faults, FaultInjector)
+                    else FaultInjector(faults))
+        for u in units:
+            u.injector = injector
+        if reconfig is not None:
+            reconfig.executor.injector = injector
+    if recovery_cost is None:
+        recovery_cost = RecoveryCostModel()
+
+    # deadline stamping for deadline-shedding units: the latest
+    # admission instant that still meets the scaled TTFT target at
+    # solo speed (ref with output_len 0 IS the solo TTFT reference,
+    # in both time domains)
+    deadline_models = {n for u in units
+                       if getattr(u, "shed_policy", "none") == "deadline"
+                       for n in u.engines}
+    if deadline_models:
+        s = shed_scale if shed_scale is not None else max(slo_scales)
+        slack = max(s - 1.0, 0.0)
+        for r in requests:
+            if r.model in deadline_models:
+                r.deadline = r.arrival + slack * ref_fn(r.model,
+                                                        len(r.prompt), 0)
+
     # drift monitor: the controller's when reconfiguring, a standalone
     # one when only planned rates are known (drift stays visible in
     # every report), none otherwise
@@ -721,6 +854,10 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
 
     requests = sorted(requests, key=lambda r: r.arrival)
     idx, ticks = 0, 0
+    fault_log: List[dict] = []
+    fault_dt = 0.0
+    watchdog_trips = 0
+    stall_run, last_progress = 0, -1
     wall0 = time.perf_counter()
     while idx < len(requests) or any(u.pending() for u in units):
         now = clock()
@@ -753,6 +890,40 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
             if deterministic:
                 clock.advance(dt)
             ticks += 1
+            # recovery events recorded by this round's ticks: charge
+            # their modeled stall (deterministic mode — realtime pays
+            # the real teardown wall time) and fold them into the
+            # fault log
+            for u in busy:
+                for rec in u.fault_events:
+                    if deterministic:
+                        dt_r = recovery_cost.dt(rec.get("requeued", 0),
+                                                rec.get("blocks", 0))
+                        clock.advance(dt_r)
+                        fault_dt += dt_r
+                        rec["dt_charged"] = dt_r
+                    fault_log.append(rec)
+                u.fault_events.clear()
+            # watchdog: zero progress (no tokens moved, nothing
+            # finished or shed) across watchdog_ticks consecutive busy
+            # ticks means no recovery path is going to unwedge this —
+            # shed everything still pending so the run terminates with
+            # submitted = finished + shed, and record the trip
+            progress = sum(u.stats.prefill_tokens + u.stats.decode_tokens
+                           + len(u.stats.finished) + len(u.stats.shed)
+                           for u in units)
+            if progress == last_progress:
+                stall_run += 1
+                if watchdog_ticks and stall_run >= watchdog_ticks:
+                    shed_n = sum(u.shed_all("watchdog") for u in units)
+                    watchdog_trips += 1
+                    fault_log.append({"kind": "watchdog", "t": clock(),
+                                      "shed": shed_n,
+                                      "stalled_ticks": stall_run})
+                    stall_run = 0
+            else:
+                stall_run = 0
+            last_progress = progress
             if ticks >= max_ticks:
                 break
         elif idx < len(requests):
@@ -789,6 +960,26 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     for u in units:
         if getattr(u, "enforce_shares", False):
             shares.update({n: u.sm_frac.get(n, 1.0) for n in u.engines})
+    fsum: Optional[FaultSummary] = None
+    if injector is not None or fault_log:
+        aborts = 0
+        if injector is not None:
+            aborts = sum(1 for rec in injector.records
+                         if rec.get("kind") == "migration_abort")
+        fsum = FaultSummary(
+            injected=(len(injector.records) if injector else 0),
+            unfired=(len(injector.unfired()) if injector else 0),
+            recoveries=sum(1 for rec in fault_log
+                           if rec["kind"] == "engine_crash"),
+            block_losses=sum(1 for rec in fault_log
+                             if rec["kind"] == "block_loss"),
+            migration_aborts=aborts,
+            watchdog_trips=watchdog_trips,
+            requeued=sum(rec.get("requeued", 0) for rec in fault_log),
+            blocks_lost=sum(rec.get("blocks", 0) for rec in fault_log
+                            if rec["kind"] == "block_loss"),
+            dt_charged=fault_dt,
+            log=fault_log)
     return ServeReport(
         horizon=horizon, wall_s=wall_s, ticks=ticks,
         deterministic=deterministic, slo_scales=scales,
@@ -797,7 +988,8 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
         rate_estimates=(dict(monitor.rate_ewma) if monitor else {}),
         sm_frac=shares,
         reconfig=(ReconfigSummary.of(reconfig.events)
-                  if reconfig is not None else None))
+                  if reconfig is not None else None),
+        faults=fsum)
 
 
 def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
@@ -806,7 +998,11 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                    cost: Optional[TickCostModel] = None,
                    refs: Optional[Dict[str, SLORef]] = None,
                    max_ticks: int = 500_000,
-                   reconfig: Optional[ReconfigController] = None
+                   reconfig: Optional[ReconfigController] = None,
+                   faults=None,
+                   recovery_cost: Optional[RecoveryCostModel] = None,
+                   watchdog_ticks: int = 1000,
+                   shed_scale: Optional[float] = None
                    ) -> ServeReport:
     """``serve_requests`` over a ``core/workload.py`` trace (the shared
     simulator/runtime arrival process).  The trace's per-LLM rates
@@ -818,4 +1014,7 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                                   max_new_cap=max_new_cap)
     return serve_requests(units, reqs, slo_scales=slo_scales, cost=cost,
                           refs=refs, max_ticks=max_ticks,
-                          planned_rates=dict(wl.rates), reconfig=reconfig)
+                          planned_rates=dict(wl.rates), reconfig=reconfig,
+                          faults=faults, recovery_cost=recovery_cost,
+                          watchdog_ticks=watchdog_ticks,
+                          shed_scale=shed_scale)

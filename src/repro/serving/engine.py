@@ -70,6 +70,16 @@ class Request:
 
     DESIGN.md §9 defines the derived metrics (TTFT/TPOT/E2E) and the
     SLO-attainment convention shared with ``core/simulator.py``.
+
+    Degradation disposition (DESIGN.md §12): a request is never
+    silently dropped — overload/fault handling either requeues it
+    (``requeues`` counts teardowns it survived; a finished request
+    with ``requeues > 0`` was *recovered*) or sheds it (``shed`` set,
+    ``finish`` stays −1 so it is an SLO miss at every scale, and
+    ``shed_reason`` records why).  ``deadline`` is the absolute clock
+    instant past which admission can no longer meet the request's
+    scaled TTFT target (stamped by the driver under
+    ``shed_policy="deadline"``; +inf = never deadline-shed).
     """
     req_id: int
     model: str
@@ -81,6 +91,11 @@ class Request:
     prefill_done: float = -1.0
     first_token: float = -1.0
     finish: float = -1.0
+    # degradation disposition (serving/faults.py, DESIGN.md §12)
+    deadline: float = float("inf")
+    shed: bool = False
+    shed_reason: str = ""
+    requeues: int = 0
 
     @property
     def done(self) -> bool:
@@ -329,6 +344,35 @@ class Engine:
             out.append(r)
         self._prefilling.clear()
         return out
+
+    def evict_seqs(self, seq_ids) -> List[Request]:
+        """Evict specific live sequences (prefilling OR decoding): free
+        their cache, reset request progress and hand the requests back
+        for requeueing.  The fault-handling twin of
+        ``evict_prefilling`` — crash recovery evicts every live seq,
+        block loss only the seqs whose pages sat in the lost arena
+        tail.  Restart-from-scratch is exact for every family (greedy
+        decoding; a fresh prefill rebuilds KV and SSM state alike)."""
+        wanted = set(int(s) for s in seq_ids)
+        out: List[Request] = []
+        for slot in self.active_slots():
+            sid = int(self.slot_seq[slot])
+            if sid not in wanted:
+                continue
+            r = self.slots[slot]
+            self.view.free_seq(sid)
+            self.slots[slot] = None
+            self.slot_seq[slot] = -1
+            self._prefilling.pop(slot, None)
+            r.output.clear()
+            r.prefill_done = -1.0
+            r.first_token = -1.0
+            out.append(r)
+        return out
+
+    def live_seq_ids(self) -> List[int]:
+        """Sequence ids of every occupied slot (prefilling included)."""
+        return [int(self.slot_seq[s]) for s in self.active_slots()]
 
     # ------------------------------------------------------------------
     def _finish_slot(self, slot: int, r: Request) -> None:

@@ -325,6 +325,29 @@ class UnifiedKVPool:
             self.n_head_blocks = n
         return removed
 
+    def tail_victims(self, n_lost: int) -> Dict[str, List[int]]:
+        """Sequences whose cache touches the arena's last ``n_lost``
+        head-blocks (fault injection: a bad HBM region eats the tail —
+        serving/faults.py ``block_loss``).  A block group is a victim
+        if ANY of its head-blocks lies in ``[n_blocks − n_lost,
+        n_blocks)``; the whole sequence is torn down (partial KV is
+        useless under paged attention).  Once every victim is evicted
+        the doomed tail is entirely free, so ``shrink(n_lost)`` then
+        removes exactly the lost blocks.  Returns {view name: [seq
+        ids]} for the scheduler to evict at the engine level (engine
+        eviction keeps slot/view/pool bookkeeping consistent)."""
+        doomed = self.n_head_blocks - max(n_lost, 0)
+        out: Dict[str, List[int]] = {}
+        for name, v in self.views.items():
+            if v.group_size == 0:
+                continue            # SSM state lives off-arena
+            ids = sorted(sid for sid, sc in v.seqs.items()
+                         if any(b + v.group_size > doomed
+                                for b in sc.bases))
+            if ids:
+                out[name] = ids
+        return out
+
     def register_model(self, cfg: ModelConfig, quota: int) -> ModelCacheView:
         assert cfg.attn_free or cfg.hd == self.head_dim or True, \
             "pools are grouped by head_dim"

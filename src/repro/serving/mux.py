@@ -55,12 +55,20 @@ import numpy as np
 
 from repro.serving.engine import (Engine, Request, jitted_step, tree_bytes,
                                   unique_tree_bytes)
+from repro.serving.faults import FaultInjector
 from repro.serving.kvcache import UnifiedKVPool, fused_block_tables
+
+SHED_POLICIES = ("none", "reject", "deadline")
 
 
 @dataclass
 class MuxStats:
     finished: List[Request] = field(default_factory=list)
+    # deliberately dropped requests (DESIGN.md §12): backpressure,
+    # deadline shedding, requeue-budget exhaustion, watchdog drains.
+    # Each carries its ``shed_reason``; the driver rolls them up as
+    # SLO misses with a visible disposition, never silent losses.
+    shed: List[Request] = field(default_factory=list)
     prefill_tokens: int = 0
     decode_tokens: int = 0
     ticks: int = 0
@@ -226,11 +234,41 @@ class MuxScheduler:
     def __init__(self, engines: Dict[str, Engine], pool: UnifiedKVPool,
                  policy: str = "adbs", adapt_every: int = 16,
                  fused: bool = False, clock=None,
-                 sm_frac: Optional[Dict[str, float]] = None):
+                 sm_frac: Optional[Dict[str, float]] = None,
+                 injector: Optional[FaultInjector] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "none",
+                 requeue_budget: int = 3, retry_budget: int = 3):
+        assert shed_policy in SHED_POLICIES, shed_policy
+        assert max_queue is None or max_queue > 0, max_queue
         self.engines = engines
         self.pool = pool
         self.policy = policy
         self.adapt_every = adapt_every
+        # graceful degradation (DESIGN.md §12) — all default-off:
+        #   injector        fault plan polled at every tick
+        #   max_queue       per-LLM admission-queue bound (backpressure
+        #                   sheds NEW arrivals when full; requeues from
+        #                   preemption/recovery bypass it — in-flight
+        #                   work is never dropped by the bound)
+        #   shed_policy     "none" | "reject" (backpressure only) |
+        #                   "deadline" (also shed queue heads whose
+        #                   Request.deadline has passed)
+        #   requeue_budget  teardowns one request may survive before it
+        #                   is shed instead of requeued
+        #   retry_budget    consecutive transiently-failed ticks before
+        #                   a transient window escalates to crash
+        #                   recovery
+        self.injector = injector
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.requeue_budget = requeue_budget
+        self.retry_budget = retry_budget
+        # recovery/degradation events of this unit, drained (and clock-
+        # charged in deterministic mode) by serving/driver.py
+        self.fault_events: List[dict] = []
+        self._down: set = set()                  # transient-down engines
+        self._transient_ticks: Dict[str, int] = {}
         self.queues: Dict[str, Deque[Request]] = {
             name: deque() for name in engines}
         self._names = list(engines)
@@ -391,11 +429,163 @@ class MuxScheduler:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queues[req.model].append(req)
+        q = self.queues[req.model]
+        if (self.shed_policy != "none" and self.max_queue is not None
+                and len(q) >= self.max_queue):
+            # bounded admission queue: backpressure sheds the NEW
+            # arrival (recorded, SLO-missed) instead of growing the
+            # queue without bound under overload
+            self._shed(req, "queue_full")
+            return
+        q.append(req)
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values()) + sum(
             len(e.active_slots()) for e in self.engines.values())
+
+    # ---- graceful degradation (DESIGN.md §12) ------------------------
+    def _shed(self, req: Request, reason: str) -> None:
+        """Deliberately drop one request: flagged (never silent),
+        ``finish`` stays −1 so the roll-up counts an SLO miss with a
+        ``shed`` disposition."""
+        req.shed = True
+        req.shed_reason = reason
+        self.stats.shed.append(req)
+
+    def _shed_expired(self) -> None:
+        """Deadline-aware shedding: pop queue heads whose admission
+        deadline has passed — by ``Request.deadline``'s construction
+        (driver-stamped) even immediate solo-speed service would miss
+        their scaled TTFT target, so carrying them only burns capacity
+        other requests could still meet their SLOs with."""
+        now = self.clock()
+        for q in self.queues.values():
+            while q and q[0].deadline < now:
+                self._shed(q.popleft(), "deadline")
+
+    def _apply_faults(self) -> None:
+        """Tick preamble: fire due plan events for this unit and track
+        transient windows (serving/faults.py).  Crash and block-loss
+        events mutate the unit immediately; a transient window marks
+        its engine down for this tick (its phase work is skipped and
+        retried next tick) and escalates to crash recovery once it has
+        burned ``retry_budget`` consecutive ticks."""
+        now = self.clock()
+        for ev in self.injector.poll(self, now):
+            if ev.kind == "engine_crash":
+                self.recover_engine(ev.target, reason="crash")
+            elif ev.kind == "block_loss":
+                self._lose_blocks(ev.magnitude)
+        for name in list(self.engines):
+            if self.injector.consume_transient(name):
+                ticks = self._transient_ticks.get(name, 0) + 1
+                if ticks > self.retry_budget:
+                    # retry budget exhausted: the engine is wedged, not
+                    # hiccuping — rebuild it (clears the window too)
+                    self._transient_ticks.pop(name, None)
+                    self.injector.clear_transient(name)
+                    self.recover_engine(name, reason="transient")
+                else:
+                    self._transient_ticks[name] = ticks
+                    self._down.add(name)
+            else:
+                self._transient_ticks.pop(name, None)
+
+    def recover_engine(self, name: str, reason: str = "crash") -> dict:
+        """Crash recovery: tear down the dead engine and rebuild it on
+        a fresh pool view, requeueing its in-flight requests.  Reuses
+        the PR-4 migration machinery end to end — ``remove_engine``
+        dissolves the fused groups (settling grant debt on rebuild),
+        the eviction path is the migration eviction path, and
+        ``add_engine`` re-fuses the rebuilt engine with its matching-
+        signature residents.  The rebuilt engine starts from clean
+        device state (zero SSM carries, empty slots) because the crash
+        lost the old state; restart-from-scratch is exact under greedy
+        decoding.  Requests past ``requeue_budget`` teardowns are shed
+        instead of requeued (a request must not ping-pong through
+        recoveries forever).  Returns the recovery record (also
+        appended to ``fault_events`` for the driver to clock-charge).
+        """
+        share = self.sm_frac.get(name, 1.0)
+        eng, queued = self.remove_engine(name)
+        blocks_held = eng.view.used
+        evicted = eng.evict_seqs(eng.live_seq_ids())
+        quota = eng.view.quota
+        self.pool.unregister_model(name)
+        view = self.pool.register_model(eng.cfg, quota)
+        params = jax.tree_util.tree_map(lambda a: a[0], eng.params)
+        fresh = Engine(eng.cfg, params, view, max_slots=eng.max_slots,
+                       max_blocks_per_seq=eng.max_blocks,
+                       chunk_tokens=eng.chunk_tokens, clock=self.clock)
+        for r in evicted:
+            r.requeues += 1
+        carried: List[Request] = []
+        shed = 0
+        # deterministic arrival-order requeue: evicted in-flight work
+        # and the carried queue re-enter in (arrival, req_id) order,
+        # independent of slot/eviction order
+        for r in sorted(list(evicted) + list(queued),
+                        key=lambda r: (r.arrival, r.req_id)):
+            if r.requeues > self.requeue_budget:
+                self._shed(r, "requeue_budget")
+                shed += 1
+            else:
+                carried.append(r)
+        self.add_engine(name, fresh, carried, sm_frac=share)
+        rec = {"kind": "engine_crash", "reason": reason,
+               "t": self.clock(), "target": name,
+               "requeued": len(evicted), "shed": shed,
+               "blocks": blocks_held}
+        self.fault_events.append(rec)
+        return rec
+
+    def _lose_blocks(self, n: int) -> dict:
+        """Block-loss fault: the arena loses its last ``n`` head-blocks
+        (a bad HBM region).  Sequences with pages in the doomed tail
+        are torn down at the engine level (pool accounting stays
+        exact) and requeued at the head of their queues in arrival
+        order; once the victims are gone the tail is entirely free and
+        the pool shrinks by exactly the lost blocks."""
+        n = min(max(n, 0), self.pool.n_head_blocks)
+        requeued = shed = 0
+        for name, sids in self.pool.tail_victims(n).items():
+            eng = self.engines.get(name)
+            if eng is None:
+                continue
+            evicted = eng.evict_seqs(sids)
+            keep: List[Request] = []
+            for r in evicted:
+                r.requeues += 1
+                if r.requeues > self.requeue_budget:
+                    self._shed(r, "requeue_budget")
+                    shed += 1
+                else:
+                    keep.append(r)
+            for r in sorted(keep, key=lambda r: (r.arrival, r.req_id),
+                            reverse=True):
+                self.queues[name].appendleft(r)
+            requeued += len(evicted)
+        removed = self.pool.shrink(n)
+        rec = {"kind": "block_loss", "t": self.clock(), "target": None,
+               "requeued": requeued, "shed": shed, "blocks": removed}
+        self.fault_events.append(rec)
+        return rec
+
+    def shed_all(self, reason: str = "watchdog") -> int:
+        """Force-drain the unit: shed every queued AND in-flight
+        request (the watchdog's last resort — a stall that survived
+        every recovery path must still terminate with ``submitted =
+        finished + shed``, not hang).  Returns the number shed."""
+        n = 0
+        for q in self.queues.values():
+            while q:
+                self._shed(q.popleft(), reason)
+                n += 1
+        for eng in self.engines.values():
+            for r in eng.evict_seqs(eng.live_seq_ids()):
+                self._shed(r, reason)
+                n += 1
+        return n
 
     # ------------------------------------------------------------------
     def _meter(self, counter: Dict[str, int], name: str, toks: int) -> None:
@@ -411,6 +601,10 @@ class MuxScheduler:
         whole-lifetime quota check, cumulative across the batch.
         Simulator counterpart: ``UnitSim._try_prefill_batch`` (same
         lifetime reservation, in bytes instead of head-blocks)."""
+        if name in self._down:
+            # transient step failure this tick: admit nothing, retry
+            # the same queue next tick
+            return []
         q = self.queues[name]
         eng = self.engines[name]
         if q and eng.lifetime_blocks(q[0]) > eng.view.quota:
@@ -441,6 +635,8 @@ class MuxScheduler:
         n = len(names)
         for i in range(n):
             name = names[(self._prefill_rr + i) % n]
+            if name in self._down:
+                continue
             eng = self.engines[name]
             batch = self._pull_batch(name)
             if batch or eng.has_prefill_work():
@@ -469,7 +665,8 @@ class MuxScheduler:
                     eng.admit_chunked(batch)
                     for r in batch:
                         r.prefill_done = now
-            jobs = [eng.export_prefill_job() for eng in grp.engines]
+            jobs = [None if name in self._down else eng.export_prefill_job()
+                    for name, eng in zip(grp.names, grp.engines)]
             n_active = sum(j is not None for j in jobs)
             if n_active == 0:
                 continue
@@ -503,6 +700,8 @@ class MuxScheduler:
         n = len(self._names)
         for i in range(n):
             name = self._names[(self._decode_rr + i) % n]
+            if name in self._down:
+                continue
             eng = self.engines[name]
             if eng.has_decode_work():
                 toks = eng.decode()
@@ -516,7 +715,8 @@ class MuxScheduler:
         group, serial fallback for heterogeneous leftovers."""
         total = 0
         for grp in self.fused_groups:
-            jobs = [eng.export_decode_job() for eng in grp.engines]
+            jobs = [None if name in self._down else eng.export_decode_job()
+                    for name, eng in zip(grp.names, grp.engines)]
             n_active = sum(j is not None for j in jobs)
             if n_active == 0:
                 continue
@@ -535,6 +735,8 @@ class MuxScheduler:
         n = len(self._serial_names)
         for i in range(n):
             name = self._serial_names[(self._decode_rr + i) % n]
+            if name in self._down:
+                continue
             eng = self.engines[name]
             if eng.has_decode_work():
                 toks = eng.decode()
@@ -554,8 +756,15 @@ class MuxScheduler:
                 eng.finished.clear()
             if eng.preempted:
                 # stall-escape evictions go back to the head of their
-                # queue and restart from scratch on the next prefill
-                for r in reversed(eng.preempted):
+                # queue and restart from scratch on the next prefill —
+                # in (arrival, req_id) order, NOT eviction order: the
+                # engine preempts youngest-first, and letting that
+                # order leak into the retry queue would serve a later
+                # arrival before an earlier one evicted the same tick
+                # (and make the requeue order depend on slot layout)
+                for r in sorted(eng.preempted,
+                                key=lambda r: (r.arrival, r.req_id),
+                                reverse=True):
                     self.queues[name].appendleft(r)
                 eng.preempted.clear()
 
@@ -589,6 +798,15 @@ class MuxScheduler:
         self.stats.ticks += 1
         self.tick_prefill_by = {}
         self.tick_decode_by = {}
+        # fault/degradation preamble (DESIGN.md §12): shed expired
+        # queue heads, fire due fault-plan events, mark transient-down
+        # engines for this tick — before any policy branch, so every
+        # policy sees the same post-fault unit
+        self._down = set()
+        if self.shed_policy == "deadline":
+            self._shed_expired()
+        if self.injector is not None:
+            self._apply_faults()
         if self.policy == "adbs":
             if self.enforce_shares:
                 # decode under the planned shares first; prefill fills
@@ -618,19 +836,25 @@ class MuxScheduler:
             # batch was admissible would stall forever once slots or
             # quota block the queue head (the unit is busy until the
             # current batch completes; new admissions wait).
-            prefilling = [n for n, e in self.engines.items()
-                          if e.has_prefill_work()]
+            # the one-LLM-at-a-time admission gate reads the FULL busy
+            # sets; transient-down engines only skip the work loops
+            # (their in-flight batch still blocks new admissions)
+            busy_prefill = [n for n, e in self.engines.items()
+                            if e.has_prefill_work()]
+            busy_decode = [n for n, e in self.engines.items()
+                           if e.has_decode_work()]
+            prefilling = [n for n in busy_prefill if n not in self._down]
             for name in prefilling:
                 toks = self.engines[name].prefill([])
                 self.stats.prefill_tokens += toks
                 self._meter(self.tick_prefill_by, name, toks)
-            active = [n for n, e in self.engines.items()
-                      if e.has_decode_work()]
+            active = [n for n in busy_decode if n not in self._down]
             oldest_name, oldest_t = None, float("inf")
             for name, q in self.queues.items():
                 if q and q[0].arrival < oldest_t:
                     oldest_name, oldest_t = name, q[0].arrival
-            if oldest_name is not None and not active and not prefilling:
+            if oldest_name is not None and not busy_decode \
+                    and not busy_prefill and oldest_name not in self._down:
                 eng = self.engines[oldest_name]
                 q = self.queues[oldest_name]
                 if q and eng.lifetime_blocks(q[0]) > eng.view.quota:

@@ -289,9 +289,13 @@ class MigrationExecutor:
 
     def __init__(self, units: Dict[int, MuxScheduler]):
         self.units = units
+        # fault injection (serving/faults.py): when the serving driver
+        # threads an injector through, every scheduled move asks it for
+        # a due ``migration_abort`` before the page copy
+        self.injector = None
 
     def execute(self, moves: Sequence[Tuple[str, int, int]],
-                new_pl: Placement) -> Dict[str, object]:
+                new_pl: Placement, now: float = 0.0) -> Dict[str, object]:
         """Apply the schedule.  A move whose destination pool cannot
         hold the live KV (too few free blocks, or no contiguous run
         under fragmentation) is SKIPPED, never half-applied: the
@@ -319,6 +323,19 @@ class MigrationExecutor:
             shrunk += max(blocks_before - src.pool.n_head_blocks, 0)
             evicted = eng.evict_prefilling()
             carried = list(evicted) + list(queued)
+            if self.injector is not None \
+                    and self.injector.take_migration_abort(now):
+                # injected mid-copy abort: the destination holds
+                # nothing yet and the source view is untouched, so the
+                # same re-home path a fragmentation abort takes leaves
+                # every request accounted for (prefill evictions are
+                # requeued with the carried queue)
+                for r in evicted:
+                    r.requeues += 1
+                src.add_engine(name, eng, carried)
+                skipped.append((name, src_id, dst_id))
+                _return_spec(new_pl, name, src_id)
+                continue
             try:
                 # quota starts at live usage; the rebalance pass below
                 # sets the popularity-proportional target
@@ -483,7 +500,7 @@ class ReconfigController:
             self._last_t = now
             return None
         moves = diff_placements(self.placement, new_pl)
-        stats = self.executor.execute(moves, new_pl)
+        stats = self.executor.execute(moves, new_pl, now=now)
         self.placement = new_pl
         self.monitor.rebase(est)
         self._last_t = now

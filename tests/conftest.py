@@ -9,6 +9,22 @@ import pytest
 # determinism + smaller compile cache churn
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# wall-clock budget per test when pytest-timeout is installed (the
+# [test] extra ships it; like hypothesis, its absence degrades
+# gracefully — a bare pytest run just has no hang protection).  A
+# wedged serving loop then fails its test instead of hanging CI; the
+# in-loop watchdog (DESIGN.md §12) is the runtime's own last resort,
+# this is the test harness's.
+_TEST_TIMEOUT_S = 600
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    for item in items:
+        if item.get_closest_marker("timeout") is None:
+            item.add_marker(pytest.mark.timeout(_TEST_TIMEOUT_S))
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,394 @@
+"""Fault injection & graceful degradation (serving/faults.py,
+DESIGN.md §12): plan parsing/nesting, and one consistency test per
+fault class — crash recovery, block loss, transient escalation,
+migration abort — each asserting exact post-fault pool accounting,
+rebuilt fused groups and zero silent drops.  Plus the degradation
+ladder itself: backpressure, deadline shedding, deterministic requeue
+order and the serving-loop watchdog."""
+import numpy as np
+import pytest
+
+from repro.core.placement import Mesh, Placement
+from repro.serving.driver import (LogicalClock, TickCostModel,
+                                  build_unit_from_specs, serve_requests)
+from repro.serving.engine import Request
+from repro.serving.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  RecoveryCostModel)
+from repro.serving.mux import MuxScheduler
+
+COST = TickCostModel()
+
+
+def _unit(policy="adbs", clock=None, **kw):
+    """Two fused qwen2-7b engines on one small pool."""
+    u = build_unit_from_specs(
+        [("a", "qwen2-7b", 3.0), ("b", "qwen2-7b", 1.0)],
+        pool_blocks=4_000, max_slots=4, chunk_tokens=16, seed=0,
+        policy=policy, fused=True, **kw)
+    clock = clock or LogicalClock()
+    u.clock = clock
+    for e in u.engines.values():
+        e.clock = clock
+    return u, clock
+
+
+def _requests(n_a=4, n_b=2, plen=24, out=6):
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, "a", list(rng.integers(1, 500, plen)), out,
+                    arrival=0.0) for i in range(n_a)]
+    reqs += [Request(100 + i, "b", list(rng.integers(1, 500, plen)), out,
+                     arrival=0.0) for i in range(n_b)]
+    return reqs
+
+
+def _accounting_exact(u):
+    """The allocator's global usage equals the per-view sum, every
+    engine's view is registered, and no grant debt is outstanding."""
+    pool = u.pool
+    assert pool.allocator.used == sum(v.used for v in pool.views.values())
+    assert set(pool.views) == set(u.engines)
+    for name, eng in u.engines.items():
+        assert eng.view is pool.views[name], name
+    assert u._grant_debt == 0, "no outstanding fused-grant debt"
+
+
+def _drain(u, max_ticks=800):
+    for _ in range(max_ticks):
+        if not u.pending():
+            return
+        u.tick()
+        u.clock.advance(0.005)
+    raise AssertionError("unit did not drain")
+
+
+# ---------------------------------------------------------------------------
+# plan parsing / severity nesting
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse_all_kinds_and_sorting():
+    plan = FaultPlan.parse("block_loss:b:256@1.5, crash:a@0.5,"
+                           "transient:a:3@2.0,migration_abort@0.1")
+    assert [e.kind for e in plan.events] == [
+        "migration_abort", "engine_crash", "block_loss", "transient_step"]
+    assert plan.targets() == ["a", "b"]
+    ev = plan.events[2]
+    assert (ev.target, ev.magnitude, ev.at) == ("b", 256, 1.5)
+    # round-trip through the JSON wire form
+    back = FaultPlan([FaultEvent(**d) for d in plan.to_json()])
+    assert back.to_json() == plan.to_json()
+
+
+@pytest.mark.parametrize("bad", [
+    "crash:a",                  # missing @time
+    "crash:a@soon",             # bad time
+    "explode:a@1",              # unknown kind
+    "crash@1",                  # crash needs a target
+    "block_loss:a@1",           # block_loss needs :blocks
+    "transient:a:x@1",          # non-integer magnitude
+    "migration_abort:a@1",      # abort takes no target
+])
+def test_fault_plan_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def test_fault_plan_random_severity_nested():
+    """Severity-s plans are prefixes of the severity-1 master list —
+    more severity strictly adds faults (the chaos bench's monotonicity
+    gate rests on this) — and severity 0 is the empty plan."""
+    names = ["a", "b", "c"]
+    full = FaultPlan.random(names, 8.0, 1.0, seed=3).to_json()
+    assert len(full) == 3 * len(names) + 1
+    prev: set = set()
+    for sev in (0.0, 0.25, 0.5, 0.75, 1.0):
+        sub = {str(e) for e in
+               FaultPlan.random(names, 8.0, sev, seed=3).to_json()}
+        assert prev <= sub <= {str(e) for e in full}, sev
+        prev = sub
+    assert FaultPlan.random(names, 8.0, 0.0, seed=3).events == []
+
+
+# ---------------------------------------------------------------------------
+# fault class 1: engine crash
+# ---------------------------------------------------------------------------
+def test_crash_recovery_consistent_state():
+    """A crash with live in-flight work tears the engine down and
+    rebuilds it fused: every request still finishes exactly once, the
+    evicted ones carry a requeue mark, pool accounting stays exact and
+    the fused group re-forms around the fresh engine."""
+    u, clock = _unit()
+    plan = FaultPlan.parse("crash:a@0.02")
+    u.injector = FaultInjector(plan)
+    reqs = _requests()
+    for r in reqs:
+        u.submit(r)
+    for _ in range(6):                     # get work in flight, then fire
+        u.tick()
+        clock.advance(0.005)
+    assert any(rec["kind"] == "engine_crash" for rec in u.fault_events)
+    rec = next(rec for rec in u.fault_events
+               if rec["kind"] == "engine_crash")
+    assert rec["target"] == "a" and rec["requeued"] >= 1
+    _accounting_exact(u)
+    assert len(u.fused_groups) == 1, "crash must re-fuse the rebuilt engine"
+    assert sorted(u.fused_groups[0].names) == ["a", "b"]
+    _drain(u)
+    fin = {r.req_id for r in u.stats.finished}
+    assert fin == {r.req_id for r in reqs}, "zero drops, zero dups"
+    assert len(u.stats.finished) == len(reqs)
+    assert any(r.requeues >= 1 for r in u.stats.finished)
+    assert not u.injector.unfired()
+    _accounting_exact(u)
+    assert u.pool.allocator.used == 0
+
+
+# ---------------------------------------------------------------------------
+# fault class 2: block loss
+# ---------------------------------------------------------------------------
+def test_block_loss_exact_shrink_and_requeue():
+    """Losing the arena tail evicts exactly the sequences with pages
+    there, requeues them at the queue head in arrival order, and
+    shrinks the pool by exactly the lost blocks."""
+    u, clock = _unit()
+    reqs = _requests(n_a=4, n_b=2)
+    for r in reqs:
+        u.submit(r)
+    for _ in range(4):
+        u.tick()
+        clock.advance(0.005)
+    pool = u.pool
+    assert pool.allocator.used > 0, "need live KV to victimize"
+    # doom every block from the highest occupied base upward so at
+    # least one live sequence is a victim
+    occ = max(b for v in pool.views.values()
+              for sc in v.seqs.values() for b in sc.bases)
+    n_before = pool.n_head_blocks
+    n_lose = n_before - occ
+    rec = u._lose_blocks(n_lose)
+    assert rec["blocks"] == n_lose, "shrink must remove exactly the loss"
+    assert pool.n_head_blocks == n_before - n_lose
+    assert rec["requeued"] >= 1
+    _accounting_exact(u)
+    # no survivor holds a page in the doomed region
+    for v in pool.views.values():
+        for sc in v.seqs.values():
+            assert all(b + v.group_size <= pool.n_head_blocks
+                       for b in sc.bases)
+    _drain(u)
+    assert {r.req_id for r in u.stats.finished} == {r.req_id for r in reqs}
+    assert len(u.stats.finished) == len(reqs)
+    assert u.pool.allocator.used == 0
+
+
+# ---------------------------------------------------------------------------
+# fault class 3: transient step failures
+# ---------------------------------------------------------------------------
+def test_transient_marks_down_then_escalates():
+    """A transient window freezes its engine (work retried, nothing
+    dropped); a window longer than the retry budget escalates to a
+    full crash recovery and clears the wedged window."""
+    u, clock = _unit()
+    u.retry_budget = 2
+    plan = FaultPlan.parse("transient:a:10@0.0")
+    u.injector = FaultInjector(plan)
+    reqs = _requests()
+    for r in reqs:
+        u.submit(r)
+    # tick 1..2: down but within budget — no recovery yet
+    u.tick()
+    assert "a" in u._down
+    assert not any(r["kind"] == "engine_crash" for r in u.fault_events)
+    u.tick()
+    # tick 3: budget exhausted → escalation
+    u.tick()
+    esc = [r for r in u.fault_events if r["kind"] == "engine_crash"]
+    assert esc and esc[0]["reason"] == "transient"
+    assert u.injector._transient_left.get("a", 0) == 0, \
+        "escalation must clear the remaining window"
+    _accounting_exact(u)
+    _drain(u)
+    assert {r.req_id for r in u.stats.finished} == {r.req_id for r in reqs}
+
+
+def test_transient_within_budget_is_pure_delay():
+    """A short hiccup (window ≤ budget) never tears anything down —
+    the same work runs a tick later and the fault log stays empty."""
+    u, clock = _unit()
+    u.retry_budget = 5
+    u.injector = FaultInjector(FaultPlan.parse("transient:a:2@0.0"))
+    reqs = _requests()
+    for r in reqs:
+        u.submit(r)
+    _drain(u)
+    assert not [r for r in u.fault_events if r["kind"] == "engine_crash"]
+    assert {r.req_id for r in u.stats.finished} == {r.req_id for r in reqs}
+    assert all(r.requeues == 0 for r in u.stats.finished)
+
+
+# ---------------------------------------------------------------------------
+# fault class 4: migration abort
+# ---------------------------------------------------------------------------
+def test_migration_abort_rehomes_engine():
+    """An abort mid-move re-homes the engine on its source unit through
+    the fragmentation-rollback path: nothing detaches, evicted
+    prefills are requeued with a retry mark, and the plan records the
+    spec back at the source mesh."""
+    from repro import configs
+    from repro.config import replace
+    from repro.core.estimator import LLMSpec
+    from repro.serving.reconfig import MigrationExecutor
+
+    clock = LogicalClock()
+    uA, _ = _unit(clock=clock)
+    uB = build_unit_from_specs([("c", "qwen2-7b", 1.0)], pool_blocks=4_000,
+                               max_slots=4, chunk_tokens=16, seed=7)
+    uB.clock = clock
+    for e in uB.engines.values():
+        e.clock = clock
+    uA.mesh_id, uB.mesh_id = 0, 1
+    reqs = _requests()
+    for r in reqs:
+        uA.submit(r)
+    for _ in range(4):
+        uA.tick()
+        clock.advance(0.005)
+    ex = MigrationExecutor({0: uA, 1: uB})
+    ex.injector = FaultInjector(FaultPlan.parse("migration_abort@0.0"))
+
+    def spec(name, rate):
+        return LLMSpec(replace(configs.get("qwen2-7b"), name=name), rate,
+                       mean_prompt=24, mean_output=8, tp=1, sm_frac=1.0,
+                       arch="qwen2-7b")
+    new_pl = Placement([Mesh(0, 2, [spec("b", 1.0)]),
+                        Mesh(1, 2, [spec("c", 1.0), spec("a", 3.0)])], 5.0)
+    stats = ex.execute([("a", 0, 1)], new_pl, now=clock())
+    assert stats["executed"] == [] and stats["skipped"] == [("a", 0, 1)]
+    assert "a" in uA.engines and "a" not in uB.engines
+    assert ex.injector.records[0]["kind"] == "migration_abort"
+    assert any(s.name == "a" for m in new_pl.meshes if m.mesh_id == 0
+               for s in m.specs), "spec must return to the source mesh"
+    _accounting_exact(uA)
+    _drain(uA)
+    assert {r.req_id for r in uA.stats.finished} == {r.req_id for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: backpressure / deadline / requeue order / watchdog
+# ---------------------------------------------------------------------------
+def test_backpressure_sheds_new_arrivals_only():
+    u, _ = _unit(max_queue=2, shed_policy="reject")
+    reqs = _requests(n_a=5, n_b=0)
+    for r in reqs:
+        u.submit(r)
+    assert len(u.queues["a"]) == 2
+    assert len(u.stats.shed) == 3
+    assert all(r.shed and r.shed_reason == "queue_full"
+               for r in u.stats.shed)
+    # requeues (appendleft) bypass the bound: in-flight work is never
+    # dropped by backpressure
+    u.queues["a"].appendleft(reqs[4])
+    assert len(u.queues["a"]) == 3
+
+
+def test_deadline_shed_pops_expired_heads():
+    u, clock = _unit(shed_policy="deadline")
+    reqs = _requests(n_a=3, n_b=1)
+    reqs[0].deadline = 0.01                # expires before service
+    reqs[1].deadline = 1e9
+    for r in reqs:
+        u.submit(r)
+    clock.advance(0.05)
+    u.tick()
+    assert [r.req_id for r in u.stats.shed] == [reqs[0].req_id]
+    assert u.stats.shed[0].shed_reason == "deadline"
+    _drain(u)
+    fin = {r.req_id for r in u.stats.finished}
+    assert fin == {r.req_id for r in reqs} - {reqs[0].req_id}
+    assert len(fin) + len(u.stats.shed) == len(reqs)
+
+
+def test_shed_policy_none_never_drops():
+    u, _ = _unit(shed_policy="none")
+    reqs = _requests(n_a=6, n_b=0)
+    for r in reqs:
+        r.deadline = 0.0                   # long expired
+        u.submit(r)
+    _drain(u)
+    assert not u.stats.shed
+    assert len(u.stats.finished) == len(reqs)
+
+
+def test_harvest_requeues_in_arrival_order():
+    """Stall-escape preemptions re-enter the queue in (arrival,
+    req_id) order, not eviction order — the deterministic-requeue pin
+    (DESIGN.md §12)."""
+    u, _ = _unit()
+    eng = u.engines["a"]
+    later = Request(9, "a", [1] * 8, 4, arrival=3.0)
+    u.queues["a"].append(later)
+    r1 = Request(1, "a", [1] * 8, 4, arrival=1.0)
+    r2 = Request(2, "a", [1] * 8, 4, arrival=2.0)
+    r0 = Request(0, "a", [1] * 8, 4, arrival=0.5)
+    eng.preempted.extend([r2, r0, r1])     # scrambled eviction order
+    u._harvest()
+    assert [r.req_id for r in u.queues["a"]] == [0, 1, 2, 9]
+
+
+def test_watchdog_terminates_hard_stall():
+    """A unit that makes zero progress forever must not hang the
+    serving loop: after ``watchdog_ticks`` busy ticks the watchdog
+    sheds everything pending and the run ends with submitted =
+    finished + shed."""
+    class WedgedScheduler(MuxScheduler):
+        def tick(self):
+            self.stats.ticks += 1          # burns a tick, moves nothing
+
+    base, _ = _unit()
+    u = WedgedScheduler(base.engines, base.pool, policy="adbs", fused=False)
+    reqs = _requests(n_a=3, n_b=1)
+    rep = serve_requests([u], reqs, slo_scales=(2.0,), cost=COST,
+                         watchdog_ticks=5)
+    assert rep.aggregate.finished == 0
+    assert rep.aggregate.shed == len(reqs)
+    assert rep.aggregate.submitted == rep.aggregate.finished \
+        + rep.aggregate.shed
+    assert rep.faults is not None and rep.faults.watchdog_trips >= 1
+    assert any(ev["kind"] == "watchdog" for ev in rep.faults.log)
+    assert all(r.shed_reason == "watchdog" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# driver integration: counters, clock charging, determinism
+# ---------------------------------------------------------------------------
+def test_driver_charges_recovery_and_reports_counters():
+    u, _ = _unit()
+    reqs = _requests()
+    plan = FaultPlan.parse("crash:a@0.02")
+    rc = RecoveryCostModel()
+    rep = serve_requests([u], reqs, slo_scales=(2.0, 8.0), cost=COST,
+                         faults=plan, recovery_cost=rc)
+    fs = rep.faults
+    assert fs is not None and fs.recoveries == 1 and fs.unfired == 0
+    assert fs.dt_charged >= rc.base, "recovery stall must hit the clock"
+    agg = rep.aggregate
+    assert agg.submitted == agg.finished + agg.shed == len(reqs)
+    assert agg.retried >= 1 and agg.recovered >= 1
+    assert "shed=" in rep.summary() and "faults:" in rep.summary()
+    j = rep.to_json()
+    assert j["faults"]["recoveries"] == 1
+    assert j["per_llm"]["a"]["retried"] >= 1
+
+
+def test_faulted_run_deterministic():
+    """Same plan + fresh unit ⇒ bit-identical faulted report: the
+    injector holds no RNG and fault costs are fixed by the event."""
+    def run():
+        u, _ = _unit()
+        reqs = _requests()
+        return serve_requests(
+            [u], reqs, slo_scales=(2.0, 8.0), cost=COST,
+            faults=FaultPlan.parse("crash:a@0.02,block_loss:b:128@0.04"))
+    a, b = run(), run()
+    assert a.horizon == b.horizon and a.ticks == b.ticks
+    assert a.aggregate.attainment == b.aggregate.attainment
+    assert a.faults.dt_charged == b.faults.dt_charged
+    assert a.faults.to_json()["log"] == b.faults.to_json()["log"]

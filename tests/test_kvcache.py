@@ -204,3 +204,61 @@ def test_block_table_roundtrip(lens):
     for sid in ok_ids:
         view.free_seq(sid)
     assert pool.allocator.used == 0
+
+# ---------------------------------------------------------------------------
+# grow/shrink/alloc under grant-debt settlement (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 96)),
+                min_size=1, max_size=60))
+def test_pool_grant_debt_interleaving(ops):
+    """Random interleavings of seq alloc-to-exhaustion, frees, and the
+    fused-group grant algebra (``MuxScheduler``: build settles debt
+    before growing, dissolve shrinks and books the unreclaimed tail as
+    debt) keep the arena exactly sized: no block is double-freed, none
+    is minted, and ``n_head_blocks == base + granted + debt`` at every
+    step.  This is the accounting a block-loss fault (``pool.shrink``
+    mid-flight, serving/faults.py) and a crash recovery (dissolve +
+    rebuild) both lean on."""
+    base = 512
+    pool = _pool(base)
+    cfg = configs.get_reduced("qwen2-7b")
+    view = pool.register_model(cfg, quota=10**9)
+    granted = debt = 0
+    live: list = []
+    next_sid = 0
+    for kind, n in ops:
+        if kind == 0:                      # alloc (may exhaust: ok=False)
+            if view.append_tokens(next_sid, n * BLOCK_TOKENS):
+                live.append(next_sid)
+            next_sid += 1
+        elif kind == 1 and live:           # free a live seq
+            view.free_seq(live.pop(n % len(live)))
+        elif kind == 2 and granted == 0:   # build: settle debt, grow rest
+            want = n
+            settle = min(debt, want)
+            debt -= settle
+            grown = pool.grow(want - settle)
+            assert grown == want - settle, "grow is unconditional"
+            granted = grown + settle
+        elif kind == 3 and granted > 0:    # dissolve: shrink, book debt
+            got = pool.shrink(granted)
+            assert 0 <= got <= granted
+            debt += granted - got
+            granted = 0
+        assert debt >= 0 and granted >= 0
+        assert pool.n_head_blocks == base + granted + debt, \
+            "arena size must equal base + outstanding grant + debt"
+        assert pool.allocator.used == view.used, "accounting exact"
+        assert pool.allocator.free_blocks \
+            == pool.n_head_blocks - pool.allocator.used
+        assert pool.k.shape[0] == pool.n_head_blocks
+    # cleanup: free everything, dissolve, settle all debt — the arena
+    # returns to its seed size with zero leaked blocks
+    for sid in list(live):
+        view.free_seq(sid)
+    if granted:
+        debt += granted - pool.shrink(granted)
+    assert pool.shrink(debt) == debt, "idle tail settles all debt"
+    assert pool.n_head_blocks == base and pool.allocator.used == 0
+    assert pool.allocator.free_blocks == base
