@@ -1,0 +1,182 @@
+"""Prefix-cache benchmark — the CI gate on copy-on-write prefix
+sharing in the unified KV pool (serving/kvcache.py, DESIGN.md §13).
+
+Four properties are asserted, all on the deterministic tick-cost
+clock so the gates are bit-reproducible:
+
+  1. **Parity** — the cache is free when it never hits: at reuse 0
+     (every prompt unique) a cache-enabled run reproduces the
+     cache-disabled run bit-for-bit (attainment, ticks, TTFT p50).
+  2. **Monotone gain** — a nested reuse sweep (the generator draws
+     identical arrivals/lengths/suffixes at every reuse level; only
+     the prefix-vs-unique coin differs) never *hurts* mean SLO
+     attainment as reuse grows, with the cache on.
+  3. **Strict win** — at high reuse the cache strictly improves
+     aggregate TTFT p50 and strictly improves SLO attainment at ≥ 1
+     scale versus the cache-disabled run of the same trace.
+  4. **Hit-rate floor** — the measured request hit rate reaches at
+     least ``HIT_FLOOR_FACTOR`` × the trace's analytic ceiling
+     (``core.workload.prefix_repeat_fraction``); the gap is the
+     concurrent-admission window (a request that arrives before its
+     prefix donor finished prefill finds nothing to adopt).
+
+Records ``experiments/results/prefix_cache.json`` with the full
+per-reuse reports (uploaded by CI next to the other artifacts).
+"""
+from __future__ import annotations
+
+from repro.core.workload import (power_law_rates, prefix_repeat_fraction,
+                                 shared_prefix_trace)
+from repro.serving.driver import (TickCostModel, build_unit_from_specs,
+                                  serve_workload)
+
+from benchmarks.common import save
+
+ARCH = "qwen2-7b"
+N_MODELS = 3
+ALPHA = 2.1
+CHUNK_TOKENS = 16
+MAX_SLOTS = 4
+MEAN_PROMPT, MEAN_OUTPUT = 48, 10
+PREFIX_LEN, N_PREFIXES = 48, 4
+SLO_SCALES = (1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0)
+REUSE_LEVELS = (0.0, 0.5, 0.9)
+HIT_FLOOR_FACTOR = 0.5
+COST = TickCostModel()
+
+
+def _unit(names, rates, pool_blocks: int, cache: bool):
+    return build_unit_from_specs(
+        [(n, ARCH, rates[n]) for n in names], pool_blocks=pool_blocks,
+        max_slots=MAX_SLOTS, chunk_tokens=CHUNK_TOKENS, seed=0,
+        policy="adbs", fused=True, prefix_cache=cache)
+
+
+def _serve(names, rates, wl, pool_blocks: int, cache: bool):
+    return serve_workload([_unit(names, rates, pool_blocks, cache)], wl,
+                          seed=1, slo_scales=SLO_SCALES, cost=COST)
+
+
+def _attainment(rep) -> dict:
+    return {s: rep.aggregate.attainment[s] for s in SLO_SCALES}
+
+
+def _hits_lookups(rep) -> tuple:
+    hits = sum(p["hits"] for p in rep.prefix.values())
+    lookups = sum(p["lookups"] for p in rep.prefix.values())
+    return hits, lookups
+
+
+def run(quick: bool = False, max_rate: float = 12.0, horizon: float = 4.0,
+        pool_blocks: int = 20_000) -> dict:
+    if quick:
+        max_rate, horizon = 12.0, 3.0
+    names = [f"llm{i}" for i in range(N_MODELS)]
+    rates = power_law_rates(names, ALPHA, max_rate)
+
+    def trace(reuse: float):
+        return shared_prefix_trace(
+            rates, horizon, seed=0, mean_prompt=MEAN_PROMPT,
+            mean_output=MEAN_OUTPUT, max_len=256,
+            n_prefixes=N_PREFIXES, prefix_len=PREFIX_LEN, reuse=reuse)
+
+    traces = {r: trace(r) for r in REUSE_LEVELS}
+    wl0 = traces[REUSE_LEVELS[0]]
+    # the sweep is nested: every reuse level replays the same arrivals,
+    # the same lengths and the same unique suffixes — only the shared
+    # prefixes differ.  Anything else would make gate 2 meaningless.
+    for r, wl in traces.items():
+        assert [(q.model, q.arrival, q.prompt_len, q.output_len)
+                for q in wl.requests] == \
+               [(q.model, q.arrival, q.prompt_len, q.output_len)
+                for q in wl0.requests], f"reuse sweep not nested at {r}"
+
+    out = {
+        "arch": ARCH, "n_models": N_MODELS, "alpha": ALPHA,
+        "max_rate": max_rate, "horizon": horizon,
+        "pool_blocks": pool_blocks, "n_requests": len(wl0.requests),
+        "rates": rates, "slo_scales": list(SLO_SCALES),
+        "reuse_levels": list(REUSE_LEVELS),
+        "hit_floor_factor": HIT_FLOOR_FACTOR, "runs": {},
+    }
+    print(f"[prefix] {len(wl0.requests)} requests, α={ALPHA}, rates "
+          f"{{{', '.join(f'{n}:{r:.2f}' for n, r in rates.items())}}}")
+
+    # ---- gate 1: reuse-0 cache-on == cache-off bit-for-bit -----------
+    base0 = _serve(names, rates, wl0, pool_blocks, cache=False)
+    on0 = _serve(names, rates, wl0, pool_blocks, cache=True)
+    out["runs"]["reuse_0.0_off"] = base0.to_json()
+    out["runs"]["reuse_0.0_on"] = on0.to_json()
+    assert _attainment(base0) == _attainment(on0), \
+        ("a never-hitting cache must reproduce the uncached run "
+         "bit-for-bit", _attainment(base0), _attainment(on0))
+    assert base0.ticks == on0.ticks and base0.horizon == on0.horizon
+    assert base0.aggregate.ttft.p50 == on0.aggregate.ttft.p50
+    hits0, _ = _hits_lookups(on0)
+    assert hits0 == 0, ("unique prompts must never hit", on0.prefix)
+    print(f"[prefix] parity: reuse 0 cache-on == cache-off "
+          f"({base0.ticks} ticks, TTFT p50 "
+          f"{base0.aggregate.ttft.p50:.3f}s, 0 hits)")
+
+    # ---- gate 2: mean attainment monotone in reuse (cache on) --------
+    means = []
+    reps = {}
+    for r in REUSE_LEVELS:
+        rep = on0 if r == 0.0 else _serve(names, rates, traces[r],
+                                          pool_blocks, cache=True)
+        reps[r] = rep
+        att = _attainment(rep)
+        mean = sum(att.values()) / len(att)
+        means.append(mean)
+        hits, lookups = _hits_lookups(rep)
+        out["runs"][f"reuse_{r}_on"] = rep.to_json()
+        print(f"[prefix] reuse {r}: {hits}/{lookups} hits, TTFT p50 "
+              f"{rep.aggregate.ttft.p50:.3f}s, mean attainment {mean:.4f}")
+    out["mean_attainment_by_reuse"] = means
+    for lo, hi in zip(means[:-1], means[1:]):
+        assert hi >= lo - 1e-9, \
+            ("attainment must not degrade as prefix reuse grows "
+             "(nested traces)", means)
+    print(f"[prefix] monotone gain: {[f'{m:.4f}' for m in means]}")
+
+    # ---- gates 3+4: strict win and hit-rate floor at high reuse ------
+    hi = REUSE_LEVELS[-1]
+    wl_hi = traces[hi]
+    base_hi = _serve(names, rates, wl_hi, pool_blocks, cache=False)
+    rep_hi = reps[hi]
+    out["runs"][f"reuse_{hi}_off"] = base_hi.to_json()
+    assert rep_hi.aggregate.ttft.p50 < base_hi.aggregate.ttft.p50, \
+        ("prefix caching must strictly improve aggregate TTFT p50 at "
+         f"reuse {hi}", rep_hi.aggregate.ttft.p50,
+         base_hi.aggregate.ttft.p50)
+    att_on, att_off = _attainment(rep_hi), _attainment(base_hi)
+    assert any(att_on[s] > att_off[s] for s in SLO_SCALES), \
+        ("prefix caching must strictly improve SLO attainment at ≥ 1 "
+         "scale", att_on, att_off)
+    assert all(att_on[s] >= att_off[s] - 1e-9 for s in SLO_SCALES), \
+        ("prefix caching must not trade one scale against another",
+         att_on, att_off)
+    print(f"[prefix] strict win at reuse {hi}: TTFT p50 "
+          f"{base_hi.aggregate.ttft.p50:.3f}s → "
+          f"{rep_hi.aggregate.ttft.p50:.3f}s")
+
+    bound = prefix_repeat_fraction(wl_hi)
+    hits, lookups = _hits_lookups(rep_hi)
+    measured = hits / lookups if lookups else 0.0
+    out["hit_rate"] = {"measured": measured, "analytic_ceiling": bound,
+                       "floor_factor": HIT_FLOOR_FACTOR}
+    assert measured >= HIT_FLOOR_FACTOR * bound, \
+        ("measured hit rate fell below the floor", measured, bound)
+    print(f"[prefix] hit rate {measured:.2%} ≥ "
+          f"{HIT_FLOOR_FACTOR} × ceiling {bound:.2%}")
+
+    save("prefix_cache", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.quick)

@@ -20,8 +20,9 @@ def main() -> int:
     from benchmarks import (chaos_degradation, fig3_compute_fraction,
                             fig5_synthetic, fig7_real, fig8_placement,
                             fig9_adbs, fig10_manager, fig11_p99,
-                            fused_tick, kernel_bench, reconfig_shift,
-                            roofline, slo_attainment, spatial_mux)
+                            fused_tick, kernel_bench, prefix_cache,
+                            reconfig_shift, roofline, slo_attainment,
+                            spatial_mux)
     jobs = [
         ("fig3_compute_fraction", lambda: fig3_compute_fraction.run()),
         ("fig5_synthetic", lambda: fig5_synthetic.run(args.quick)),
@@ -35,6 +36,7 @@ def main() -> int:
         ("spatial_mux", lambda: spatial_mux.run(args.quick)),
         ("reconfig_shift", lambda: reconfig_shift.run(args.quick)),
         ("chaos_degradation", lambda: chaos_degradation.run(args.quick)),
+        ("prefix_cache", lambda: prefix_cache.run(args.quick)),
         ("kernel_bench", lambda: kernel_bench.run(args.quick)),
         ("roofline_16x16", lambda: roofline.run("16x16")),
         ("roofline_2x16x16", lambda: roofline.run("2x16x16")),

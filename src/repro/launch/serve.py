@@ -33,7 +33,8 @@ from repro.config import replace
 from repro.core.estimator import LLMSpec
 from repro.core.placement import (Mesh, Placement, load_placement, place,
                                   save_placement)
-from repro.core.workload import poisson_trace, power_law_rates
+from repro.core.workload import (poisson_trace, power_law_rates,
+                                 shared_prefix_trace)
 from repro.serving.driver import (TickCostModel, build_unit_from_specs,
                                   serve_workload, units_from_placement)
 from repro.serving.engine import TRACE_COUNTS, unique_tree_bytes
@@ -75,6 +76,16 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chunk-tokens", type=int, default=0,
                     help="chunked prefill window (0 = whole-prompt jobs)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share KV blocks across requests with a common "
+                         "prompt prefix (copy-on-write; needs "
+                         "--chunk-tokens > 0; DESIGN.md §13)")
+    ap.add_argument("--prefix-reuse", type=float, default=0.0,
+                    help="fraction of requests that open with a popular "
+                         "shared prefix (> 0 switches the workload to "
+                         "core.workload.shared_prefix_trace; pairs with "
+                         "--prefix-cache but works without it as the "
+                         "uncached baseline)")
     ap.add_argument("--fused", action="store_true",
                     help="fused multi-LLM tick (one jitted sweep per "
                          "phase for same-architecture engines)")
@@ -175,6 +186,13 @@ def main() -> int:
     if any(s <= 0 for s in slo_check):
         ap.error(f"--slo-scales entries must be > 0: {args.slo_scales!r}")
 
+    if not 0.0 <= args.prefix_reuse <= 1.0:
+        ap.error(f"--prefix-reuse must be in [0, 1] "
+                 f"(got {args.prefix_reuse})")
+    if args.prefix_cache and args.chunk_tokens == 0:
+        ap.error("--prefix-cache requires --chunk-tokens > 0: a partial "
+                 "prefix hit resumes prefill mid-prompt, which only the "
+                 "chunked path can do (DESIGN.md §13)")
     if args.placement and args.save_placement:
         ap.error("--placement and --save-placement are mutually "
                  "exclusive (load a plan OR optimize and save one)")
@@ -253,7 +271,8 @@ def main() -> int:
             chunk_tokens=args.chunk_tokens, seed=args.seed,
             policy=args.policy, fused=args.fused,
             enforce_shares=not args.no_enforce_shares,
-            max_queue=args.max_queue, shed_policy=args.shed_policy)
+            max_queue=args.max_queue, shed_policy=args.shed_policy,
+            prefix_cache=args.prefix_cache)
     else:
         unknown = sorted(set(sm_overrides) - set(names))
         if unknown:
@@ -270,7 +289,8 @@ def main() -> int:
             max_slots=args.max_slots, chunk_tokens=args.chunk_tokens,
             seed=args.seed, policy=args.policy, fused=args.fused,
             sm_fracs=sm_fracs,
-            max_queue=args.max_queue, shed_policy=args.shed_policy)]
+            max_queue=args.max_queue, shed_policy=args.shed_policy,
+            prefix_cache=args.prefix_cache)]
 
     # ---- fault-injection plan ----------------------------------------
     fault_plan = None
@@ -316,9 +336,15 @@ def main() -> int:
                               for n, f in u.sm_frac.items()))
 
     # ---- workload: shared generator with the simulator ---------------
-    wl = poisson_trace(rates, args.horizon, seed=args.seed,
-                       mean_prompt=args.mean_prompt,
-                       mean_output=args.mean_output)
+    if args.prefix_reuse > 0.0:
+        wl = shared_prefix_trace(rates, args.horizon, seed=args.seed,
+                                 mean_prompt=args.mean_prompt,
+                                 mean_output=args.mean_output,
+                                 reuse=args.prefix_reuse)
+    else:
+        wl = poisson_trace(rates, args.horizon, seed=args.seed,
+                           mean_prompt=args.mean_prompt,
+                           mean_output=args.mean_output)
     src = "plan rates" if args.placement else f"α={args.alpha}"
     print(f"[serve] {len(wl.requests)} requests over {args.horizon}s for "
           f"{len(rates)} LLMs ({src}: "
@@ -393,9 +419,17 @@ def main() -> int:
         pool = u.pool
         print(f"[serve] pool: free={pool.allocator.free_blocks}"
               f"/{pool.n_head_blocks} head-blocks, fragmentation="
-              f"{pool.allocator.fragmentation():.3f}")
+              f"{pool.allocator.fragmentation():.3f}, shrinkable tail="
+              f"{pool.allocator.shrinkable_tail()}")
         for name, view in pool.views.items():
             print(f"[serve]   {name}: quota={view.quota} used={view.used}")
+        if args.prefix_cache:
+            for name, st in pool.prefix_stats().items():
+                print(f"[serve]   {name} prefix cache: "
+                      f"{st['hits']}/{st['lookups']} hits "
+                      f"({st['hit_rate']:.0%}), {st['hit_tokens']} tokens "
+                      f"adopted, {st['entries']} entries holding "
+                      f"{st['held_blocks']} head-blocks")
         print(f"[serve] HBM: "
               f"{unique_tree_bytes([e.params for e in u.engines.values()]) / 1e6:.1f}"
               f" MB weights (de-duplicated), {pool.hbm_bytes() / 1e6:.0f} MB "

@@ -16,10 +16,39 @@ import jax.numpy as jnp
 
 from repro.paging import resolve_physical_blocks
 
-__all__ = ["write_tokens", "resolve_physical_blocks",
+__all__ = ["write_tokens", "resolve_physical_blocks", "copy_block_groups",
            "fused_paged_decode_attention", "paged_decode_attention",
            "fused_paged_chunk_attention", "paged_chunk_attention",
            "windowed_decode_attention", "write_window"]
+
+
+def copy_block_groups(pool_k, pool_v, src_bases, dst_bases, n_kv, n_layers,
+                      src_k=None, src_v=None):
+    """Device-side page copy between block groups — one gather/scatter
+    over every (layer, kv-head) page of each group.
+
+    Logical group bases are resolved to physical head-block ids through
+    ``paging.resolve_physical_blocks`` — the SAME resolution every
+    kernel uses, so the copy can never disagree with the pool layout.
+    Source and destination index lists are elementwise aligned, making
+    this an exact page copy.  Powers copy-on-write divergence of a
+    shared prefix block (same-pool: ``src_k/src_v`` default to the
+    destination arrays) and cross-pool KV migration (pass the source
+    pool's arrays).
+
+    pool_k/pool_v: destination arena [N, BT, hd]
+    src_bases/dst_bases: group base per token-block (host lists)
+    Returns updated (pool_k, pool_v).
+    """
+    if src_k is None:
+        src_k, src_v = pool_k, pool_v
+    st = jnp.asarray(src_bases, jnp.int32)[None, :]
+    dt = jnp.asarray(dst_bases, jnp.int32)[None, :]
+    sp = jnp.concatenate([resolve_physical_blocks(st, li, n_kv)
+                          for li in range(n_layers)], axis=1).reshape(-1)
+    dp = jnp.concatenate([resolve_physical_blocks(dt, li, n_kv)
+                          for li in range(n_layers)], axis=1).reshape(-1)
+    return pool_k.at[dp].set(src_k[sp]), pool_v.at[dp].set(src_v[sp])
 
 
 def write_tokens(pool_k, pool_v, k_new, v_new, table, start_pos, layer, n_kv):

@@ -295,7 +295,13 @@ def requests_from_workload(wl: Workload, engines: Dict[str, Engine],
     reserved next-token slot); ``max_new_cap`` optionally caps output
     lengths (CPU-scale runs).  Token ids are drawn uniformly from the
     target model's vocab — content is irrelevant to scheduling, only
-    lengths and arrivals matter.
+    lengths and arrivals matter — UNLESS the spec carries explicit
+    ``prompt_tokens`` (shared-prefix traces): those are mapped into
+    the model's vocab with a fixed modular map, which preserves
+    cross-request prefix equality, the one content property the
+    prefix cache keys on.  The rng is consumed identically either
+    way, so a token-carrying trace and its plain twin materialize
+    the same lengths and arrivals.
     """
     rng = np.random.default_rng(seed)
     reqs: List[Request] = []
@@ -307,7 +313,14 @@ def requests_from_workload(wl: Workload, engines: Dict[str, Engine],
                              max_new_cap or spec.output_len,
                              envelope // 2))
         plen = max(1, min(spec.prompt_len, envelope - out_len - 1))
-        prompt = list(rng.integers(1, eng.cfg.vocab_size, plen))
+        drawn = rng.integers(1, eng.cfg.vocab_size, plen)
+        if spec.prompt_tokens is not None:
+            vocab = eng.cfg.vocab_size
+            prompt = [int(t) % (vocab - 1) + 1
+                      for t in spec.prompt_tokens[:plen]]
+            prompt += [int(t) for t in drawn[len(prompt):]]
+        else:
+            prompt = list(drawn)
         reqs.append(Request(rid, spec.model, prompt, out_len,
                             arrival=spec.arrival))
     return reqs
@@ -323,7 +336,8 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
                           reduced: bool = True,
                           sm_fracs: Optional[Dict[str, float]] = None,
                           max_queue: Optional[int] = None,
-                          shed_policy: str = "none"
+                          shed_policy: str = "none",
+                          prefix_cache: bool = False
                           ) -> MuxScheduler:
     """Instantiate one real colocated unit from ``(name, arch, rate)``
     triples: one engine per spec over a shared ``UnifiedKVPool``, with
@@ -336,9 +350,17 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
     the shares and the deterministic clock charges phases by effective
     share (``TickCostModel.tick_dt``).  ``None`` keeps the legacy
     temporal accounting — the pure-temporal baseline.
+
+    ``prefix_cache`` arms per-LLM prefix indexes on the unit's pool
+    (DESIGN.md §13): repeated prompt prefixes are adopted from cache
+    and skip their prefill chunks.  Needs ``chunk_tokens`` — the
+    whole-prompt prefill path cannot resume mid-prompt.
     """
     assert specs, "a unit needs at least one (name, arch, rate) spec"
-    pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32)
+    assert not (prefix_cache and not chunk_tokens), \
+        "prefix_cache requires chunked prefill (chunk_tokens > 0)"
+    pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32,
+                         prefix_cache=prefix_cache)
     rate_sum = sum(max(r, 0.0) for _, _, r in specs)
     min_quota = max(pool_blocks // (8 * len(specs)), 1)
     engines: Dict[str, Engine] = {}
@@ -370,7 +392,8 @@ def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
                          fused: bool = False,
                          enforce_shares: bool = True,
                          max_queue: Optional[int] = None,
-                         shed_policy: str = "none"
+                         shed_policy: str = "none",
+                         prefix_cache: bool = False
                          ) -> List[MuxScheduler]:
     """The placement → runtime bridge: one real unit per non-empty mesh
     of an optimizer plan (group membership = the mesh's LLM set, fused
@@ -398,7 +421,8 @@ def units_from_placement(pl: Placement, pool_blocks: int = 200_000,
             chunk_tokens=chunk_tokens, seed=seed + m.mesh_id,
             policy=policy, fused=fused,
             sm_fracs=(sm if enforce_shares else None),
-            max_queue=max_queue, shed_policy=shed_policy)
+            max_queue=max_queue, shed_policy=shed_policy,
+            prefix_cache=prefix_cache)
         # mesh identity for the reconfiguration subsystem + mesh size
         # for the deterministic clock's per-unit tick scaling
         u.mesh_id = m.mesh_id
@@ -550,6 +574,11 @@ class ServeReport:
     sm_frac: Dict[str, float] = field(default_factory=dict)
     reconfig: Optional[ReconfigSummary] = None
     faults: Optional[FaultSummary] = None
+    # per-LLM prefix-cache counters (PrefixIndex.stats(); empty when
+    # --prefix-cache is off), gathered from the units' CURRENT pool
+    # views at report time — crash recovery replaces views, so any
+    # engine map captured at start would be stale
+    prefix: Dict[str, dict] = field(default_factory=dict)
 
     def summary(self) -> str:
         a = self.aggregate
@@ -596,6 +625,12 @@ class ServeReport:
                 f"Σ|Δsm_frac|={r.share_moved:.2f}, "
                 f"{r.stall_ticks} stall ticks "
                 f"({r.dt_charged * 1e3:.1f}ms charged)")
+        if self.prefix:
+            lines.append("prefix cache: " + ", ".join(
+                f"{n}: {p['hits']}/{p['lookups']} hits "
+                f"({p['hit_rate']:.0%}, {p['hit_tokens']} tok adopted, "
+                f"{p['entries']} cached)"
+                for n, p in self.prefix.items()))
         if self.faults is not None:
             f = self.faults
             lines.append(
@@ -621,7 +656,8 @@ class ServeReport:
                 "reconfig": (self.reconfig.to_json()
                              if self.reconfig else None),
                 "faults": (self.faults.to_json()
-                           if self.faults else None)}
+                           if self.faults else None),
+                "prefix": {k: dict(v) for k, v in self.prefix.items()}}
 
 
 def _roll_up(name: str, reqs: List[Request], horizon: float,
@@ -957,9 +993,11 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                for n, rs in by_model.items()}
     agg = _roll_up("aggregate", requests, horizon, scales, ref_fn)
     shares: Dict[str, float] = {}
+    prefix_stats: Dict[str, dict] = {}
     for u in units:
         if getattr(u, "enforce_shares", False):
             shares.update({n: u.sm_frac.get(n, 1.0) for n in u.engines})
+        prefix_stats.update(u.prefix_stats())
     fsum: Optional[FaultSummary] = None
     if injector is not None or fault_log:
         aborts = 0
@@ -989,7 +1027,7 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
         sm_frac=shares,
         reconfig=(ReconfigSummary.of(reconfig.events)
                   if reconfig is not None else None),
-        faults=fsum)
+        faults=fsum, prefix=prefix_stats)
 
 
 def serve_workload(units: Sequence[MuxScheduler], wl: Workload,

@@ -545,7 +545,11 @@ class MuxScheduler:
         are torn down at the engine level (pool accounting stays
         exact) and requeued at the head of their queues in arrival
         order; once the victims are gone the tail is entirely free and
-        the pool shrinks by exactly the lost blocks."""
+        the pool shrinks by exactly the lost blocks.  A shared doomed
+        block evicts every sharer (each sharer's block table names it,
+        so ``tail_victims`` lists them all), and ``pool.shrink`` drops
+        doomed prefix-index entries with it — no dangling cached base
+        can survive a block loss."""
         n = min(max(n, 0), self.pool.n_head_blocks)
         requeued = shed = 0
         for name, sids in self.pool.tail_victims(n).items():
@@ -570,6 +574,14 @@ class MuxScheduler:
                "requeued": requeued, "shed": shed, "blocks": removed}
         self.fault_events.append(rec)
         return rec
+
+    def prefix_stats(self) -> Dict[str, dict]:
+        """Per-LLM prefix-cache counters for this unit's pool (empty
+        when ``--prefix-cache`` is off) — the ServeReport's hit-rate
+        source.  Read from the pool's CURRENT views, so counters
+        survive engine replacement on crash recovery (the fresh view's
+        index starts cold, as it must: the old refs died with it)."""
+        return self.pool.prefix_stats()
 
     def shed_all(self, reason: str = "watchdog") -> int:
         """Force-drain the unit: shed every queued AND in-flight

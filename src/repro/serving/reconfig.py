@@ -312,9 +312,16 @@ class MigrationExecutor:
         for name, src_id, dst_id in moves:
             src, dst = self.units[src_id], self.units[dst_id]
             eng = src.engines[name]
-            need = sum(len(sc.bases) for sc in eng.view.seqs.values()) \
-                * eng.view.group_size
-            if need > dst.pool.allocator.free_blocks:
+            # physical need counts DISTINCT block groups — a prefix
+            # block shared by several sequences migrates as one copy
+            # (migrate_view keeps the sharing structure), so summing
+            # per-seq tables would over-count and skip feasible moves
+            uniq = {b for sc in eng.view.seqs.values() for b in sc.bases}
+            need = len(uniq) * eng.view.group_size
+            # available_blocks, not free_blocks: the destination's
+            # prefix-cache inventory is evictable on demand and must
+            # not veto a move (migrate_view reclaims it as needed)
+            if need > dst.pool.available_blocks():
                 skipped.append((name, src_id, dst_id))
                 _return_spec(new_pl, name, src_id)
                 continue

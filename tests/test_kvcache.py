@@ -262,3 +262,130 @@ def test_pool_grant_debt_interleaving(ops):
     assert pool.shrink(debt) == debt, "idle tail settles all debt"
     assert pool.n_head_blocks == base and pool.allocator.used == 0
     assert pool.allocator.free_blocks == base
+
+# ---------------------------------------------------------------------------
+# refcounted sharing (prefix caching, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def test_allocator_share_refcounts_and_double_free():
+    a = BlockAllocator(16)
+    s = a.alloc(4)
+    a.share(s, 4)
+    assert a.used == 8 and a.physical_used == 4
+    assert a.refcount(s) == 2
+    a.free(s, 4)                        # one holder lets go...
+    assert a.used == 4 and a.physical_used == 4, \
+        "a block must never be reclaimed while refcount > 0"
+    assert a.alloc(16) is None, "shared blocks still occupy the arena"
+    a.free(s, 4)                        # ...now the last one does
+    assert a.used == 0 and a.free_blocks == 16
+    with pytest.raises(ValueError):
+        a.free(s, 4)                    # double free must raise
+    with pytest.raises(ValueError):
+        a.share(s, 1)                   # sharing free space is a bug
+    assert a.alloc(16) == 0
+
+
+def test_fragmentation_vs_shrinkable_tail():
+    """Regression: ``largest_free_range``/``fragmentation`` describe
+    interior allocatability and must NOT be read as shrink capacity —
+    a single pinned tail block clamps ``shrink`` regardless of how big
+    the interior free space is.  ``shrinkable_tail`` is the honest
+    shrink figure."""
+    a = BlockAllocator(64)
+    s1 = a.alloc(48)
+    s2 = a.alloc(16)                    # pins [48, 64): the tail
+    a.free(s1, 48)                      # huge interior free run
+    assert a.largest_free_range() == 48
+    assert a.fragmentation() == 0.0
+    assert a.shrinkable_tail() == 0, "pinned tail → nothing shrinkable"
+    assert a.shrink(16) == 0, "shrink must refuse the pinned tail"
+    assert a.n_blocks == 64
+    a.free(s2, 16)
+    assert a.shrinkable_tail() == 64
+
+
+def test_pool_shrinkable_tail_exposed():
+    pool = _pool(256)
+    cfg = configs.get_reduced("qwen2-7b")
+    view = pool.register_model(cfg, quota=10**6)
+    assert pool.shrinkable_tail() == 256
+    assert view.append_tokens(0, BLOCK_TOKENS)
+    assert pool.shrinkable_tail() == 256 - view.used
+    view.free_seq(0)
+    assert pool.shrinkable_tail() == 256
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 64)),
+                min_size=1, max_size=50))
+def test_pool_sharing_interleaving(ops):
+    """Random interleavings of seq allocation, frees, prefix sharing
+    (``share_prefix``), copy-on-write appends into shared tails, and
+    the fused-grant grow/shrink/debt algebra keep every allocator
+    invariant exact: ``n_head_blocks == base + granted + debt``,
+    ``used`` equals the refcount-weighted live set, ``physical_used``
+    counts distinct live blocks, and the free list stays sorted,
+    coalesced, disjoint from live blocks and in-bounds.  No block is
+    reclaimed while a holder remains (DESIGN.md §13)."""
+    base = 512
+    pool = UnifiedKVPool(base, 16)
+    cfg = configs.get_reduced("qwen2-7b")
+    view = pool.register_model(cfg, quota=10**9)
+    gs = view.group_size
+    granted = debt = 0
+    live: list = []
+    next_sid = 0
+    for kind, n in ops:
+        if kind == 0:                      # new seq (may exhaust: ok=False)
+            if view.append_tokens(next_sid, (n % 8 + 1) * BLOCK_TOKENS):
+                live.append(next_sid)
+            next_sid += 1
+        elif kind == 1 and live:           # free a live seq
+            view.free_seq(live.pop(n % len(live)))
+        elif kind == 2 and granted == 0:   # build: settle debt, grow rest
+            settle = min(debt, n)
+            debt -= settle
+            pool.grow(n - settle)
+            granted = n
+        elif kind == 3 and granted > 0:    # dissolve: shrink, book debt
+            got = pool.shrink(granted)
+            debt += granted - got
+            granted = 0
+        elif kind == 4 and live:           # adopt a donor's prefix
+            donor = view.seqs[live[n % len(live)]]
+            if donor.bases:
+                k = 1 + n % len(donor.bases)
+                tok = (k - 1) * BLOCK_TOKENS + 1 + n % BLOCK_TOKENS
+                if view.share_prefix(next_sid, donor.bases[:k], tok):
+                    live.append(next_sid)
+                next_sid += 1
+        elif kind == 5 and live:           # append (COW on shared tails)
+            view.append_tokens(live[n % len(live)], n)
+        alloc = pool.allocator
+        assert pool.n_head_blocks == base + granted + debt
+        refs = alloc.refcounts()
+        assert alloc.used == sum(refs.values()) == view.used
+        assert view.used == sum(len(view.seqs[s].bases) * gs for s in live)
+        assert alloc.physical_used == len(refs)
+        assert alloc.free_blocks == pool.n_head_blocks - len(refs)
+        free_set: set = set()
+        prev_end = -1
+        for s, e in alloc._free:
+            assert 0 <= s < e <= alloc.n_blocks, "free range out of bounds"
+            assert s > prev_end, "free list must stay sorted + coalesced"
+            prev_end = e
+            free_set.update(range(s, e))
+        assert len(free_set) == alloc.free_blocks
+        assert not free_set & refs.keys(), \
+            "a live (possibly shared) block leaked into the free list"
+        for sid in live:
+            sc = view.seqs[sid]
+            assert sc.shared <= len(sc.bases)
+            assert all(b + gs <= pool.n_head_blocks for b in sc.bases)
+    for sid in list(live):
+        view.free_seq(sid)
+    if granted:
+        debt += granted - pool.shrink(granted)
+    assert pool.shrink(debt) == debt, "idle tail settles all debt"
+    assert pool.n_head_blocks == base and pool.allocator.used == 0
+    assert pool.allocator.free_blocks == base

@@ -1,0 +1,310 @@
+"""Prefix caching in the unified KV pool (DESIGN.md §13): shared-
+prefix decode bit-identical to the unshared run (fused and serial),
+partial-hit prefill resuming at the right chunk, copy-on-write
+divergence, and index invalidation on block loss / crash recovery."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import BLOCK_TOKENS
+from repro.serving.driver import LogicalClock, build_unit_from_specs
+from repro.serving.engine import Request
+from repro.serving.kvcache import UnifiedKVPool
+
+PREF = None  # filled lazily by _prefix()
+
+
+def _prefix(n_blocks=2):
+    rng = np.random.default_rng(9)
+    return list(rng.integers(1, 500, n_blocks * BLOCK_TOKENS))
+
+
+def _unit(cache: bool, fused: bool = True, clock=None, pool_blocks=6_000):
+    u = build_unit_from_specs(
+        [("a", "qwen2-7b", 2.0), ("b", "qwen2-7b", 1.0)],
+        pool_blocks=pool_blocks, max_slots=4, chunk_tokens=16, seed=0,
+        policy="adbs", fused=fused, prefix_cache=cache)
+    clock = clock or LogicalClock()
+    u.clock = clock
+    for e in u.engines.values():
+        e.clock = clock
+    return u, clock
+
+
+def _drain(u, max_ticks=800):
+    for _ in range(max_ticks):
+        if not u.pending():
+            return
+        u.tick()
+        u.clock.advance(0.005)
+    raise AssertionError("unit did not drain")
+
+
+def _sharer_reqs(pref, n=3, tail=8, out=6):
+    rng = np.random.default_rng(13)
+    return [Request(1 + i, "a",
+                    pref + list(rng.integers(1, 500, tail)), out,
+                    arrival=0.0)
+            for i in range(n)]
+
+
+def _run_schedule(cache: bool, fused: bool):
+    """Donor first (populates the index), then three sharers — the
+    exact same submissions against a cached and an uncached unit."""
+    pref = _prefix()
+    u, _ = _unit(cache, fused=fused)
+    donor = Request(0, "a", pref + [7, 7, 7, 7], 6, arrival=0.0)
+    u.submit(donor)
+    _drain(u)
+    for r in _sharer_reqs(pref):
+        u.submit(r)
+    _drain(u)
+    out = {r.req_id: list(r.output) for r in u.stats.finished}
+    return u, out
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "serial"])
+def test_shared_prefix_decode_bit_identical(fused):
+    """Decoding on adopted (shared, read-only) prefix blocks produces
+    exactly the tokens the unshared run produces — the cached KV pages
+    are the pages prefill would have written."""
+    u_ref, ref = _run_schedule(cache=False, fused=fused)
+    u_hit, hit = _run_schedule(cache=True, fused=fused)
+    assert set(ref) == set(hit) == {0, 1, 2, 3}
+    assert ref == hit, "shared-prefix outputs must be bit-identical"
+    stats = u_hit.prefix_stats()["a"]
+    assert stats["hits"] == 3, "all three sharers must adopt the prefix"
+    assert stats["hit_tokens"] == 3 * 2 * BLOCK_TOKENS
+    assert u_ref.prefix_stats() == {}, "cache off → no counters"
+    # the unit drained: only the index holds blocks now
+    pool = u_hit.pool
+    assert pool.allocator.used == sum(
+        v.prefix_index.held_blocks for v in pool.views.values()
+        if v.prefix_index is not None)
+
+
+def test_partial_hit_resumes_at_right_chunk():
+    """A prompt whose first two blocks are cached starts prefill at
+    token 32: the chunk job's offset says so, the sequence is born
+    with the adopted tokens counted, and stamping still happens at
+    prompt completion."""
+    pref = _prefix()                      # 32 tokens = 2 full blocks
+    u, _ = _unit(cache=True)
+    donor = Request(0, "a", pref + [7, 7, 7, 7], 6, arrival=0.0)
+    u.submit(donor)
+    _drain(u)
+    eng = u.engines["a"]
+    idx = eng.view.prefix_index
+    assert len(idx) == 2 and idx.inserted == 2, \
+        "the donor's two full prompt blocks must be indexed"
+
+    r = _sharer_reqs(pref, n=1)[0]        # 40-token prompt, lcp 32
+    eng.admit_chunked([r])
+    sid = r._seq_id
+    sc = eng.view.seqs[sid]
+    assert sc.shared == 2 and sc.n_tokens == 40, \
+        "adopted blocks + reserved remainder, read-only prefix marked"
+    assert list(eng._prefilling.values()) == [32], \
+        "prefill must resume at the first uncached token"
+    job = eng.export_prefill_job()
+    assert list(job.offs) == [32] and list(job.clens) == [8]
+    assert idx.hits == 1 and idx.hit_tokens == 32
+    assert r.prefill_done < 0 and r.first_token < 0, \
+        "partial hits must not pre-stamp completion times"
+    _drain(u)
+    assert r.first_token >= 0 and len(r.output) == 6
+
+
+def test_adoption_clamped_below_full_prompt():
+    """A prompt that IS a cached chain (length an exact block
+    multiple) adopts one block less — prefill must still compute the
+    last token's logits for the first generated token."""
+    pref = _prefix()
+    u, _ = _unit(cache=True)
+    u.submit(Request(0, "a", pref, 4, arrival=0.0))
+    _drain(u)
+    eng = u.engines["a"]
+    r = Request(1, "a", list(pref), 4, arrival=0.0)
+    eng.admit_chunked([r])
+    assert list(eng._prefilling.values()) == [BLOCK_TOKENS], \
+        "adopt only ⌊(len−1)/BT⌋ blocks: the last block is recomputed"
+    _drain(u)
+    ref_u, _ = _unit(cache=False)
+    ref_u.submit(Request(0, "a", pref, 4, arrival=0.0))
+    ref_u.submit(Request(1, "a", list(pref), 4, arrival=0.0))
+    _drain(ref_u)
+    assert {q.req_id: list(q.output) for q in u.stats.finished} \
+        == {q.req_id: list(q.output) for q in ref_u.stats.finished}
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write at the view + cache_ops level
+# ---------------------------------------------------------------------------
+def _crafted_view():
+    pool = UnifiedKVPool(256, 8, dtype=jnp.float32)
+    cfg = configs.get_reduced("qwen2-7b")
+    view = pool.register_model(cfg, quota=10**6)
+    assert view.append_tokens(0, BLOCK_TOKENS)    # donor: one full block
+    base = view.seqs[0].bases[0]
+    gs = view.group_size
+    pool.k = pool.k.at[base:base + gs].set(1.0)
+    pool.v = pool.v.at[base:base + gs].set(2.0)
+    return pool, view, base, gs
+
+
+def test_cow_divergence_independent_continuations():
+    """A write landing inside a shared tail block triggers COW: the
+    sharer gets a private, bit-identical copy of the donor's pages and
+    subsequent writes never leak across."""
+    pool, view, base, gs = _crafted_view()
+    assert view.share_prefix(1, [base], 8)        # adopt half the block
+    assert pool.allocator.refcount(base) == 2
+    assert view.used == 2 * gs, "full charge per sharer (DESIGN.md §13)"
+    assert view.append_tokens(1, 1)               # write → COW
+    sc = view.seqs[1]
+    new = sc.bases[0]
+    assert new != base and sc.shared == 0
+    assert pool.allocator.refcount(base) == 1
+    assert pool.allocator.refcount(new) == 1
+    assert np.array_equal(np.asarray(pool.k[new:new + gs]),
+                          np.asarray(pool.k[base:base + gs]))
+    assert np.array_equal(np.asarray(pool.v[new:new + gs]),
+                          np.asarray(pool.v[base:base + gs]))
+    # diverge the private copy — the donor's pages stay untouched
+    pool.k = pool.k.at[new].add(5.0)
+    assert (np.asarray(pool.k[base:base + gs]) == 1.0).all()
+    assert not np.array_equal(np.asarray(pool.k[new:new + gs]),
+                              np.asarray(pool.k[base:base + gs]))
+    assert view.used == 2 * gs, "COW costs physical blocks, not quota"
+    view.free_seq(0)
+    view.free_seq(1)
+    assert pool.allocator.used == 0
+
+
+def test_cow_unshare_in_place_when_sole_holder():
+    """When the donor is gone before the sharer writes, the refcount
+    is 1 and COW degenerates to an in-place unshare — no copy, no new
+    allocation."""
+    pool, view, base, gs = _crafted_view()
+    assert view.share_prefix(1, [base], 8)
+    view.free_seq(0)                              # donor leaves first
+    assert pool.allocator.refcount(base) == 1
+    free_before = pool.allocator.free_blocks
+    assert view.append_tokens(1, 1)
+    sc = view.seqs[1]
+    assert sc.bases[0] == base and sc.shared == 0, "unshare in place"
+    assert pool.allocator.free_blocks == free_before
+    view.free_seq(1)
+    assert pool.allocator.used == 0
+
+
+def test_share_prefix_full_quota_charge_enforced():
+    pool, view, base, gs = _crafted_view()
+    view.quota = gs                               # donor already uses it
+    assert not view.share_prefix(1, [base], 8), \
+        "a sharer over quota must be refused (full-charge policy)"
+    assert pool.allocator.refcount(base) == 1 and 1 not in view.seqs
+
+
+# ---------------------------------------------------------------------------
+# index lifecycle: block loss, crash recovery, eviction under pressure
+# ---------------------------------------------------------------------------
+def _no_dangling(pool):
+    for v in pool.views.values():
+        if v.prefix_index is None:
+            continue
+        for _, (b, _) in v.prefix_index.entries():
+            assert b + v.group_size <= pool.n_head_blocks, \
+                "index entry points past the shrunk arena"
+            assert pool.allocator.refcount(b) >= 1, \
+                "index entry holds no ref — dangling base"
+
+
+def test_block_loss_invalidates_doomed_index_entries():
+    """A tail loss with a live sharer mid-flight: the sharer is
+    evicted (every sharer of a doomed block is a victim), doomed index
+    entries are dropped, the shrink removes exactly the lost blocks
+    and no dangling base survives."""
+    pref = _prefix()
+    u, clock = _unit(cache=True)
+    pool = u.pool
+    # pin the arena front so the cached blocks land high: the doomed
+    # tail then contains them while capacity survives the loss
+    hog = pool.allocator.alloc(3_000)
+    assert hog == 0
+    u.submit(Request(0, "a", pref + [7, 7, 7, 7], 6, arrival=0.0))
+    _drain(u)
+    sharer = _sharer_reqs(pref, n=1)[0]
+    u.submit(sharer)
+    for _ in range(3):                     # adopt + get into flight
+        u.tick()
+        clock.advance(0.005)
+    idx = u.engines["a"].view.prefix_index
+    assert len(idx) == 2 and idx.hits == 1
+    shared_bases = {b for _, (b, _) in idx.entries()}
+    n_before = pool.n_head_blocks
+    n_lose = n_before - min(min(shared_bases),
+                            min(b for v in pool.views.values()
+                                for sc in v.seqs.values()
+                                for b in sc.bases))
+    rec = u._lose_blocks(n_lose)
+    assert rec["blocks"] == n_lose, \
+        "victim eviction + index drop must free the exact doomed tail"
+    assert pool.n_head_blocks == n_before - n_lose
+    assert rec["requeued"] >= 1, "the live sharer is a victim"
+    assert len(idx) == 0 and idx.evicted >= 2
+    _no_dangling(pool)
+    assert pool.allocator.used \
+        == sum(v.used for v in pool.views.values()) + 3_000
+    pool.allocator.free(hog, 3_000)        # release the pin, then drain
+    _drain(u)
+    assert {r.req_id for r in u.stats.finished} == {0, sharer.req_id}, \
+        "zero drops after the loss"
+
+
+def test_crash_recovery_clears_index_without_leaks():
+    pref = _prefix()
+    u, _ = _unit(cache=True)
+    u.submit(Request(0, "a", pref + [7, 7, 7, 7], 6, arrival=0.0))
+    _drain(u)
+    pool = u.pool
+    assert len(u.engines["a"].view.prefix_index) == 2
+    assert pool.allocator.used > 0         # index inventory only
+    u.recover_engine("a", reason="crash")
+    idx = u.engines["a"].view.prefix_index
+    assert idx is not None and len(idx) == 0, \
+        "recovery must re-arm an EMPTY index (pool-level flag)"
+    assert pool.allocator.used == 0, "the dead view's index refs died too"
+    _no_dangling(pool)
+    for r in _sharer_reqs(pref, n=2):      # cold cache still serves
+        u.submit(r)
+    _drain(u)
+    assert len(u.stats.finished) == 3
+
+
+def test_index_evicted_under_allocation_pressure():
+    """Cached inventory is disposable: when the arena cannot fit a new
+    sequence, LRU index entries are evicted instead of refusing
+    admission (``available_blocks`` counts them; ``reclaim`` frees
+    them)."""
+    pool = UnifiedKVPool(8 * 4, 8, dtype=jnp.float32, prefix_cache=True)
+    cfg = configs.get_reduced("qwen2-7b")
+    view = pool.register_model(cfg, quota=10**6)
+    gs = view.group_size                   # 4 → arena holds 8 groups
+    rng = np.random.default_rng(3)
+    for sid in range(8):                   # fill the arena with cache
+        prompt = list(rng.integers(1, 500, BLOCK_TOKENS))
+        assert view.append_tokens(sid, BLOCK_TOKENS)
+        view.prefix_index.insert(prompt, view.seqs[sid].bases)
+        view.free_seq(sid)
+    assert pool.allocator.free_blocks == 0
+    assert pool.available_blocks() == 8 * gs, "inventory is evictable"
+    assert view.can_append(100, BLOCK_TOKENS)
+    assert view.append_tokens(100, 2 * BLOCK_TOKENS), \
+        "allocation pressure must evict LRU entries, not fail"
+    assert len(view.prefix_index) == 6 and view.prefix_index.evicted == 2
+    _no_dangling(pool)
+    view.free_seq(100)
+    view.prefix_index.clear()
+    assert pool.allocator.used == 0

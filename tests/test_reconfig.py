@@ -448,3 +448,122 @@ def test_static_report_still_exposes_estimates():
     assert rep.rate_estimates["llm2"] > 2.0, \
         "the post-flip surge must show in the EWMA estimates"
     assert "rates est(plan)" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# migration × prefix sharing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _twin_cached_units(fused: bool):
+    uA = build_unit_from_specs(
+        [("m0", "qwen2-7b", 2.0), ("m1", "qwen2-7b", 1.0)],
+        pool_blocks=6_000, max_slots=4, chunk_tokens=16, seed=0,
+        policy="adbs", fused=fused, prefix_cache=True)
+    uB = build_unit_from_specs(
+        [("m2", "qwen2-7b", 1.0)], pool_blocks=6_000, max_slots=4,
+        chunk_tokens=16, seed=7, policy="adbs", fused=fused,
+        prefix_cache=True)
+    clock = LogicalClock()
+    for u in (uA, uB):
+        u.clock = clock
+        for e in u.engines.values():
+            e.clock = clock
+    return uA, uB
+
+
+def _shared_history(uA):
+    """Donor populates m1's prefix index, then two sharers adopt the
+    cached blocks and sit mid-decode."""
+    rng = np.random.default_rng(21)
+    pref = list(rng.integers(1, 500, 32))            # 2 full blocks
+    uA.submit(Request(0, "m1", pref + [3, 3, 3, 3], 4))
+    for _ in range(200):
+        if not uA.pending():
+            break
+        uA.tick()
+    sharers = [Request(1 + i, "m1",
+                       pref + list(rng.integers(1, 500, 8)), 8)
+               for i in range(2)]
+    for r in sharers:
+        uA.submit(r)
+    for _ in range(6):
+        uA.tick()
+    return sharers
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "serial"])
+def test_migrated_shared_prefix_bit_identical(fused):
+    """Migrating a view with shared prefix blocks rebuilds the
+    refcounts and the prefix index on the destination (distinct groups
+    copied once, cache-only entries dropped) and the carried decode
+    stays bit-identical."""
+    uA_ref, _ = _twin_cached_units(fused)
+    _shared_history(uA_ref)
+    ref_logits = _decode_logits(uA_ref.engines["m1"])
+
+    uA, uB = _twin_cached_units(fused)
+    sharers = _shared_history(uA)
+    src_view = uA.engines["m1"].view
+    src_alloc = uA.pool.allocator
+    shared_bases = list(src_view.seqs[sharers[0]._seq_id].bases[:2])
+    assert src_view.seqs[sharers[0]._seq_id].shared == 2
+    assert src_view.seqs[sharers[1]._seq_id].bases[:2] == shared_bases, \
+        "both sharers must reference the same cached groups"
+    # 2 sharers + the index entry each hold a ref on the shared groups
+    assert all(src_alloc.refcount(b) == 3 for b in shared_bases)
+    n_entries = len(src_view.prefix_index)
+    assert n_entries == 2
+
+    blocks = _migrate_m1(uA, uB)
+    dst_view = uB.pool.views["m1"]
+    gs = dst_view.group_size
+    uniq = {b for sc in dst_view.seqs.values() for b in sc.bases}
+    assert blocks == len(uniq) * gs, \
+        "shared groups must be copied once, not once per sharer"
+    # sharing metadata carried: same shared counts, common new bases
+    new_shared = dst_view.seqs[sharers[0]._seq_id].bases[:2]
+    assert dst_view.seqs[sharers[1]._seq_id].bases[:2] == new_shared
+    assert dst_view.seqs[sharers[0]._seq_id].shared == 2
+    # index rebuilt against the remapped bases (entries whose groups a
+    # live sequence carries; here: both)
+    assert len(dst_view.prefix_index) == n_entries
+    assert {b for _, (b, _) in dst_view.prefix_index.entries()} \
+        == set(new_shared)
+    assert all(uB.pool.allocator.refcount(b) == 3 for b in new_shared)
+    assert dst_view.used == sum(len(sc.bases) * gs
+                                for sc in dst_view.seqs.values())
+
+    mig_logits = _decode_logits(uB.engines["m1"])
+    assert np.array_equal(ref_logits, mig_logits), \
+        "post-migration shared-prefix logits must be bit-identical"
+    for _ in range(600):
+        if not (uA.pending() + uB.pending() + uA_ref.pending()):
+            break
+        for u in (uA, uB, uA_ref):
+            if u.pending():
+                u.tick()
+    ref_out = {r.req_id: list(r.output) for r in uA_ref.stats.finished}
+    mig_out = {r.req_id: list(r.output)
+               for u in (uA, uB) for r in u.stats.finished}
+    assert ref_out == mig_out and set(mig_out) == {0, 1, 2}
+
+
+def test_migrate_drops_cache_only_entries():
+    """Index entries no live sequence shares are deliberately NOT
+    migrated (copying cold cache would inflate the migration); the
+    source's refs are released with the view."""
+    uA, uB = _twin_cached_units(fused=False)
+    rng = np.random.default_rng(22)
+    pref = list(rng.integers(1, 500, 32))
+    uA.submit(Request(0, "m1", pref + [3, 3, 3, 3], 4))
+    for _ in range(200):
+        if not uA.pending():
+            break
+        uA.tick()
+    src_view = uA.engines["m1"].view
+    assert len(src_view.prefix_index) == 2 and not src_view.seqs
+    blocks = _migrate_m1(uA, uB)
+    assert blocks == 0, "cache-only inventory must not be copied"
+    dst_view = uB.pool.views["m1"]
+    assert len(dst_view.prefix_index) == 0
+    assert uB.pool.allocator.used \
+        == sum(v.used for v in uB.pool.views.values())
