@@ -1,0 +1,202 @@
+"""Streaming front-end benchmark — the CI gate on the async serving
+layer (serving/frontend.py, router.py, metrics.py; DESIGN.md §14).
+
+Topology: two meshes of UNEQUAL size (a 4-device fast unit and a
+1-device slow unit), each hosting one replica of the same three model
+families (``llm<i>@0`` fast, ``llm<i>@1`` slow).  The trace names
+families, not replicas, so the router decides which mesh serves each
+request; rates are popularity-skewed (α = 2.1).  Everything runs on the
+deterministic tick-cost clock, so the gates are bit-reproducible.
+
+Three properties are asserted:
+
+  1. **Open-loop == closed-loop** — replaying the same explicit-replica
+     trace through the async streaming front end reproduces the
+     closed-loop driver bit-for-bit: every streamed token sequence
+     equals the driver run's ``Request.output``, and attainment, tick
+     count and horizon match exactly.  One scheduling loop, zero
+     streaming tax.
+  2. **Load-aware routing wins** — with family-named requests,
+     least-loaded routing attains at least as much as blind round-robin
+     at EVERY SLO scale and strictly more at some scale: round-robin
+     sends half the traffic to the 4×-slower mesh and its queues back
+     up; least-loaded sees the queue depth + pool pressure and shifts
+     traffic to the fast mesh.
+  3. **Metrics are live** — the least-loaded run's metrics snapshot
+     carries per-LLM submitted/finished counters, TTFT histogram
+     observations for every engine that served traffic, and router
+     decision counters, all consistent with the report's roll-ups.
+
+Records ``experiments/results/frontend_stream.json`` with both arms'
+reports plus the full metrics snapshot (uploaded by CI next to the
+other artifacts).
+"""
+from __future__ import annotations
+
+from repro.core.workload import power_law_rates, synthesize
+from repro.serving.driver import (TickCostModel, build_unit_from_specs,
+                                  requests_from_workload, serve_requests)
+from repro.serving.frontend import ServingFrontend, serve_and_collect
+from repro.serving.metrics import ServingMetrics
+
+from benchmarks.common import save
+
+ARCH = "qwen2-7b"
+FAMILIES = ("llm0", "llm1", "llm2")
+ALPHA = 2.1
+CHUNK_TOKENS = 16
+MAX_SLOTS = 4
+FAST_DEVICES, SLOW_DEVICES = 4, 1
+SLO_SCALES = (1.25, 1.5, 2.0, 3.0, 4.0, 6.0)
+COST = TickCostModel()
+
+
+def _units(rates):
+    """One replica of every family on each mesh; the fast mesh gets
+    4 devices and proportionally more pool blocks, mirroring the
+    placement bridge's per-mesh HBM split."""
+    units = []
+    for mesh_id, devices in ((0, FAST_DEVICES), (1, SLOW_DEVICES)):
+        specs = [(f"{fam}@{mesh_id}", ARCH, rates[fam])
+                 for fam in FAMILIES]
+        blocks = 20_000 * devices // (FAST_DEVICES + SLOW_DEVICES)
+        u = build_unit_from_specs(specs, pool_blocks=max(blocks, 4096),
+                                  max_slots=MAX_SLOTS,
+                                  chunk_tokens=CHUNK_TOKENS, seed=0,
+                                  policy="adbs", fused=True)
+        u.mesh_id = mesh_id
+        u.n_devices = devices
+        units.append(u)
+    return units
+
+
+def _family_requests(wl, units, seed: int = 1):
+    """Materialize the trace with FAMILY model names: lengths/vocab come
+    from the fast replica (all replicas share the architecture), and the
+    router resolves the family to a replica at submit time."""
+    proxy = {fam: units[0].engines[f"{fam}@0"] for fam in FAMILIES}
+    return requests_from_workload(wl, proxy, seed=seed)
+
+
+def _serve_frontend(wl, strategy, rates):
+    units = _units(rates)
+    reqs = _family_requests(wl, units)
+    metrics = ServingMetrics()
+    fe = ServingFrontend(units, reqs, strategy=strategy, metrics=metrics,
+                         planned_rates=dict(rates),
+                         slo_scales=SLO_SCALES, cost=COST)
+    report, outs = serve_and_collect(fe)
+    return report, outs, metrics
+
+
+def _attainment(rep) -> dict:
+    return {s: rep.aggregate.attainment[s] for s in SLO_SCALES}
+
+
+def run(quick: bool = False, max_rate: float = 48.0,
+        horizon: float = 3.0) -> dict:
+    if quick:
+        max_rate, horizon = 48.0, 2.0
+    rates = power_law_rates(list(FAMILIES), ALPHA, max_rate)
+    wl = synthesize(list(FAMILIES), alpha=ALPHA, max_rate=max_rate,
+                    horizon=horizon, seed=0, mean_prompt=16,
+                    mean_output=6, max_len=128)
+    out = {
+        "arch": ARCH, "families": list(FAMILIES), "alpha": ALPHA,
+        "max_rate": max_rate, "horizon": horizon,
+        "fast_devices": FAST_DEVICES, "slow_devices": SLOW_DEVICES,
+        "n_requests": len(wl.requests), "rates": rates,
+        "slo_scales": list(SLO_SCALES), "runs": {},
+    }
+    print(f"[frontend] {len(wl.requests)} requests over {horizon}s, "
+          f"meshes {FAST_DEVICES}+{SLOW_DEVICES} devices, rates "
+          f"{{{', '.join(f'{n}:{r:.2f}' for n, r in rates.items())}}}")
+
+    # ---- gate 1: open-loop streaming == closed-loop driver ------------
+    # Explicit replica names (round-robin pins each family to @0, the
+    # only replica the closed-loop arm also uses) keep both arms on ONE
+    # unit so the comparison is scheduling-identical.
+    units_a = _units(rates)
+    reqs_a = _family_requests(wl, units_a)
+    for r in reqs_a:
+        r.model = f"{r.model}@0"
+    rep_closed = serve_requests([units_a[0]], reqs_a,
+                                slo_scales=SLO_SCALES, cost=COST)
+    units_b = _units(rates)
+    reqs_b = _family_requests(wl, units_b)
+    for r in reqs_b:
+        r.model = f"{r.model}@0"
+    fe = ServingFrontend([units_b[0]], reqs_b, slo_scales=SLO_SCALES,
+                         cost=COST)
+    rep_stream, outs = serve_and_collect(fe)
+    by_id = {r.req_id: r for r in reqs_a}
+    for r in reqs_b:
+        stream = outs[r.req_id]
+        assert stream == by_id[r.req_id].output == r.output, \
+            ("streamed tokens must equal the closed-loop output "
+             "bit-for-bit", r.req_id)
+    assert _attainment(rep_closed) == _attainment(rep_stream)
+    assert rep_closed.ticks == rep_stream.ticks
+    assert rep_closed.horizon == rep_stream.horizon
+    out["runs"]["closed_loop"] = rep_closed.to_json()
+    out["runs"]["open_loop_stream"] = rep_stream.to_json()
+    print(f"[frontend] parity: {len(reqs_b)} streams bit-identical to "
+          f"the closed-loop driver ({rep_stream.ticks} ticks)")
+
+    # ---- gate 2: least-loaded ≥ round-robin, strictly better somewhere
+    rep_rr, _, _ = _serve_frontend(wl, "round_robin", rates)
+    rep_ll, _, m_ll = _serve_frontend(wl, "least_loaded", rates)
+    att_rr, att_ll = _attainment(rep_rr), _attainment(rep_ll)
+    out["runs"]["round_robin"] = rep_rr.to_json()
+    out["runs"]["least_loaded"] = rep_ll.to_json()
+    for s in SLO_SCALES:
+        print(f"[frontend] scale {s}: round_robin {att_rr[s]:.4f}  "
+              f"least_loaded {att_ll[s]:.4f}")
+    assert all(att_ll[s] >= att_rr[s] - 1e-9 for s in SLO_SCALES), \
+        ("least-loaded routing must not lose to round-robin at any "
+         "scale", att_ll, att_rr)
+    assert any(att_ll[s] > att_rr[s] + 1e-9 for s in SLO_SCALES), \
+        ("least-loaded routing must strictly beat round-robin at some "
+         "scale on the skewed unequal-mesh topology", att_ll, att_rr)
+
+    # ---- gate 3: the metrics layer observed the least-loaded run ------
+    snap = m_ll.snapshot()
+    fams = {f["name"]: f for f in snap["families"]}
+    sub = sum(s["value"]
+              for s in fams["mux_requests_submitted_total"]["series"])
+    fin = sum(s["value"]
+              for s in fams["mux_requests_finished_total"]["series"])
+    assert sub == rep_ll.aggregate.submitted, (sub, rep_ll.aggregate)
+    assert fin == rep_ll.aggregate.finished, (fin, rep_ll.aggregate)
+    served = {s["labels"]["llm"]: s["value"]
+              for s in fams["mux_requests_finished_total"]["series"]
+              if s["value"] > 0}
+    ttft_obs = {s["labels"]["llm"]: s["count"]
+                for s in fams["mux_ttft_seconds"]["series"]}
+    assert all(ttft_obs.get(n, 0) == c for n, c in served.items()), \
+        ("every finished request must land in its TTFT histogram",
+         served, ttft_obs)
+    decisions = sum(s["value"]
+                    for s in fams["mux_router_decisions_total"]["series"]
+                    if s["labels"]["strategy"] == "least_loaded")
+    assert decisions == rep_ll.aggregate.submitted, \
+        ("every submitted request routes through the strategy",
+         decisions, rep_ll.aggregate.submitted)
+    qps = {s["labels"]["llm"]: s["value"]
+           for s in fams["mux_llm_qps"]["series"]}
+    assert qps and all(v >= 0 for v in qps.values())
+    out["metrics_snapshot"] = snap
+    print(f"[frontend] metrics: {len(fams)} families, "
+          f"{decisions:.0f} routing decisions, per-replica finishes "
+          f"{{{', '.join(f'{n}:{v:.0f}' for n, v in sorted(served.items()))}}}")
+
+    save("frontend_stream", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.quick)

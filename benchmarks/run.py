@@ -20,9 +20,9 @@ def main() -> int:
     from benchmarks import (chaos_degradation, fig3_compute_fraction,
                             fig5_synthetic, fig7_real, fig8_placement,
                             fig9_adbs, fig10_manager, fig11_p99,
-                            fused_tick, kernel_bench, prefix_cache,
-                            reconfig_shift, roofline, slo_attainment,
-                            spatial_mux)
+                            frontend_stream, fused_tick, kernel_bench,
+                            prefix_cache, reconfig_shift, roofline,
+                            slo_attainment, spatial_mux)
     jobs = [
         ("fig3_compute_fraction", lambda: fig3_compute_fraction.run()),
         ("fig5_synthetic", lambda: fig5_synthetic.run(args.quick)),
@@ -37,6 +37,7 @@ def main() -> int:
         ("reconfig_shift", lambda: reconfig_shift.run(args.quick)),
         ("chaos_degradation", lambda: chaos_degradation.run(args.quick)),
         ("prefix_cache", lambda: prefix_cache.run(args.quick)),
+        ("frontend_stream", lambda: frontend_stream.run(args.quick)),
         ("kernel_bench", lambda: kernel_bench.run(args.quick)),
         ("roofline_16x16", lambda: roofline.run("16x16")),
         ("roofline_2x16x16", lambda: roofline.run("2x16x16")),

@@ -36,11 +36,15 @@ from repro.core.placement import (Mesh, Placement, load_placement, place,
 from repro.core.workload import (poisson_trace, power_law_rates,
                                  shared_prefix_trace)
 from repro.serving.driver import (TickCostModel, build_unit_from_specs,
-                                  serve_workload, units_from_placement)
+                                  requests_from_workload, serve_workload,
+                                  units_from_placement)
 from repro.serving.engine import TRACE_COUNTS, unique_tree_bytes
 from repro.serving.faults import FaultPlan
+from repro.serving.frontend import ServingFrontend, serve_and_collect
+from repro.serving.metrics import MetricsServer, ServingMetrics
 from repro.serving.mux import SHED_POLICIES
 from repro.serving.reconfig import ReconfigController
+from repro.serving.router import ROUTER_STRATEGIES
 
 
 def _unit_names(archs):
@@ -140,6 +144,24 @@ def main() -> int:
                     help="cluster size for --save-placement")
     ap.add_argument("--report", default=None, metavar="OUT_JSON",
                     help="write the full ServeReport JSON here")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the async streaming front end "
+                         "(serving/frontend.py): open-loop ingestion + "
+                         "per-request token streams over the same "
+                         "scheduling loop as the closed-loop driver")
+    ap.add_argument("--router", default=None,
+                    choices=list(ROUTER_STRATEGIES),
+                    help="cross-LLM routing strategy for --frontend "
+                         "(serving/router.py); requests naming a model "
+                         "family resolve to a replica at submit time")
+    ap.add_argument("--metrics-json", default=None, metavar="OUT_JSON",
+                    help="arm the metrics layer (serving/metrics.py) and "
+                         "write the final snapshot JSON here")
+    ap.add_argument("--port", type=int, default=None,
+                    help="arm the metrics layer and expose it over HTTP "
+                         "while serving: GET /metrics (Prometheus text), "
+                         "/metrics.json, /events (SSE); 0 picks an "
+                         "ephemeral port")
     ap.add_argument("--reconfig", action="store_true",
                     help="live reconfiguration: watch arrival-rate "
                          "drift, re-solve the placement online and "
@@ -200,11 +222,17 @@ def main() -> int:
         ap.error("--reconfig needs a multiplexing policy (adbs or "
                  "round_robin); fcfs has no quotas to rebalance")
     if args.reconfig and not args.deterministic:
-        ap.error("--reconfig requires --deterministic: realtime mode "
-                 "calibrates solo-probe SLO references once at startup, "
-                 "and a migration that moves an engine across meshes "
-                 "leaves its reference stale (the deterministic clock's "
-                 "references are analytic and never go stale)")
+        # previously rejected; now the driver computes analytic SLO
+        # references from a TickCostModel at the owning mesh's current
+        # size, so references follow migrated engines (DESIGN.md §14)
+        print("[serve] note: --reconfig under the wall clock uses "
+              "analytic SLO references (TickCostModel at the owning "
+              "mesh's size) instead of startup solo probes")
+    if args.router is not None and not args.frontend:
+        ap.error("--router needs --frontend (routing happens at the "
+                 "front end's submit path)")
+    if args.port is not None and args.port < 0:
+        ap.error(f"--port must be >= 0 (got {args.port})")
     archs = args.archs.split(",")
     names = _unit_names(archs)
     slo_scales = tuple(float(s) for s in args.slo_scales.split(","))
@@ -382,12 +410,44 @@ def main() -> int:
               f"drift threshold {args.drift_threshold}×, "
               f"{len(ctrl.units)} unit(s)")
 
-    report = serve_workload(units, wl, seed=args.seed,
-                            max_new_cap=args.max_new,
-                            slo_scales=slo_scales, cost=cost,
-                            reconfig=ctrl, faults=fault_plan,
-                            watchdog_ticks=args.watchdog_ticks,
-                            shed_scale=args.shed_scale)
+    # ---- observability layer -----------------------------------------
+    metrics = None
+    server = None
+    if args.metrics_json or args.port is not None:
+        metrics = ServingMetrics()
+        if args.port is not None:
+            server = MetricsServer(metrics, port=args.port).start()
+            print(f"[serve] metrics endpoint live at {server.url}/metrics "
+                  f"(also /metrics.json, /events)")
+
+    if args.frontend:
+        engines = {}
+        for u in units:
+            engines.update(u.engines)
+        reqs = requests_from_workload(wl, engines, seed=args.seed,
+                                      max_new_cap=args.max_new)
+        fe = ServingFrontend(units, reqs, strategy=args.router,
+                             metrics=metrics,
+                             planned_rates=dict(wl.rates),
+                             slo_scales=slo_scales, cost=cost,
+                             reconfig=ctrl, faults=fault_plan,
+                             watchdog_ticks=args.watchdog_ticks,
+                             shed_scale=args.shed_scale)
+        report, outs = serve_and_collect(fe)
+        streamed = sum(len(o) for o in outs.values() if isinstance(o, list))
+        errors = sum(1 for o in outs.values() if isinstance(o, Exception))
+        print(f"[serve] frontend streamed {streamed} tokens across "
+              f"{len(outs)} request streams "
+              f"({errors} terminated by shed/cancel)"
+              + (f", router={args.router}" if args.router else ""))
+    else:
+        report = serve_workload(units, wl, seed=args.seed,
+                                max_new_cap=args.max_new,
+                                slo_scales=slo_scales, cost=cost,
+                                reconfig=ctrl, faults=fault_plan,
+                                watchdog_ticks=args.watchdog_ticks,
+                                shed_scale=args.shed_scale,
+                                metrics=metrics)
 
     # ---- report ------------------------------------------------------
     agg = report.aggregate
@@ -440,6 +500,17 @@ def main() -> int:
         with open(args.report, "w") as f:
             json.dump(report.to_json(), f, indent=1)
         print(f"[serve] report JSON → {args.report}")
+    if metrics is not None:
+        snap = metrics.snapshot()
+        n_series = sum(len(f["series"]) for f in snap["families"])
+        print(f"[serve] metrics: {len(snap['families'])} families, "
+              f"{n_series} live series, {metrics.log.seq} log records")
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump(snap, f, indent=1)
+            print(f"[serve] metrics snapshot JSON → {args.metrics_json}")
+    if server is not None:
+        server.close()
     return 0
 
 

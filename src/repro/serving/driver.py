@@ -60,6 +60,10 @@ from repro.serving.reconfig import ReconfigController, WorkloadMonitor
 # reports are meant to be compared side by side
 DEFAULT_SLO_SCALES: Tuple[float, ...] = (2.0, 4.0, 6.0, 8.0, 12.0, 16.0)
 
+# ServeReport.to_json format version (DESIGN.md §14): bump on shape
+# changes so downstream tooling can diff runs across PRs
+SERVE_REPORT_SCHEMA_VERSION = 2
+
 
 # ---------------------------------------------------------------------------
 # clocks
@@ -201,20 +205,30 @@ class TickCostModel:
         return self.base + min(t_serial, t_spatial)
 
     def solo_reference(self, prompt_len: int, output_len: int,
-                       chunk_tokens: Optional[int] = None) -> float:
+                       chunk_tokens: Optional[int] = None,
+                       devices: int = 1) -> float:
         """Ideal single-request E2E on an idle unit: prefill runs as
         one tick (or ceil(prompt/chunk) chunk ticks) and every further
         output token as one decode tick.  The first output token is
         committed by the prefill tick itself and billed in neither
         phase's token count — mirroring exactly how the serving loop
         meters ``MuxStats`` tokens, so the reference is what the
-        request would cost under this very clock."""
+        request would cost under this very clock.
+
+        ``devices`` divides the per-token terms exactly like ``dt``
+        does.  The DETERMINISTIC reference convention stays
+        ``devices=1`` (the paper's single-device solo latency —
+        attainment rewards giving a hot LLM a bigger mesh); the
+        analytic wall-clock references used under live reconfiguration
+        pass the owning mesh's size instead, because there the
+        reference stands in for a solo probe on the engine's CURRENT
+        hardware (DESIGN.md §14)."""
         n_prefill_ticks = (1 if not chunk_tokens
                            else -(-prompt_len // chunk_tokens))
         n_decode_ticks = max(output_len - 1, 0)   # first token ∈ prefill
         return ((n_prefill_ticks + n_decode_ticks) * self.base
-                + prompt_len * self.prefill_tok
-                + n_decode_ticks * self.decode_tok)
+                + (prompt_len * self.prefill_tok
+                   + n_decode_ticks * self.decode_tok) / max(devices, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -477,6 +491,11 @@ class LLMReport:
     retried: int = 0
     recovered: int = 0
     shed_reasons: Dict[str, int] = field(default_factory=dict)
+    # client abandonments (DESIGN.md §14) — NOT sheds: the client
+    # walked away, the server stayed healthy.  Cancelled requests keep
+    # counting in the attainment denominator (submitted), preserving
+    # submitted = finished + shed + cancelled at drain.
+    cancelled: int = 0
 
     def to_json(self) -> dict:
         return {"name": self.name, "submitted": self.submitted,
@@ -487,6 +506,7 @@ class LLMReport:
                 "goodput": {str(k): v for k, v in self.goodput.items()},
                 "shed": self.shed, "retried": self.retried,
                 "recovered": self.recovered,
+                "cancelled": self.cancelled,
                 "shed_reasons": dict(self.shed_reasons)}
 
 
@@ -579,6 +599,14 @@ class ServeReport:
     # views at report time — crash recovery replaces views, so any
     # engine map captured at start would be stale
     prefix: Dict[str, dict] = field(default_factory=dict)
+    # report-format version so downstream tooling can diff runs across
+    # PRs: bumped whenever to_json's shape changes.  v2 added
+    # schema_version itself, per-LLM `cancelled` and the embedded
+    # final metrics snapshot.
+    schema_version: int = SERVE_REPORT_SCHEMA_VERSION
+    # final ServingMetrics snapshot (serving/metrics.py), embedded when
+    # the run was served with a metrics registry; None otherwise
+    metrics: Optional[dict] = None
 
     def summary(self) -> str:
         a = self.aggregate
@@ -593,6 +621,7 @@ class ServeReport:
                  f"p99={a.e2e.p99:.2f}s"]
         lines.append(f"aggregate: shed={a.shed} retried={a.retried} "
                      f"recovered={a.recovered}"
+                     + (f" cancelled={a.cancelled}" if a.cancelled else "")
                      + (f" (shed by: "
                         + ", ".join(f"{k}={v}" for k, v
                                     in sorted(a.shed_reasons.items()))
@@ -645,7 +674,8 @@ class ServeReport:
         return "\n".join(lines)
 
     def to_json(self) -> dict:
-        return {"horizon": self.horizon, "wall_s": self.wall_s,
+        return {"schema_version": self.schema_version,
+                "horizon": self.horizon, "wall_s": self.wall_s,
                 "ticks": self.ticks, "deterministic": self.deterministic,
                 "slo_scales": list(self.slo_scales),
                 "aggregate": self.aggregate.to_json(),
@@ -657,7 +687,8 @@ class ServeReport:
                              if self.reconfig else None),
                 "faults": (self.faults.to_json()
                            if self.faults else None),
-                "prefix": {k: dict(v) for k, v in self.prefix.items()}}
+                "prefix": {k: dict(v) for k, v in self.prefix.items()},
+                "metrics": self.metrics}
 
 
 def _roll_up(name: str, reqs: List[Request], horizon: float,
@@ -690,6 +721,7 @@ def _roll_up(name: str, reqs: List[Request], horizon: float,
                      shed=sum(1 for r in reqs if r.shed),
                      retried=len(retried),
                      recovered=sum(1 for r in retried if r.finish >= 0),
+                     cancelled=sum(1 for r in reqs if r.cancelled),
                      shed_reasons=shed_reasons)
 
 
@@ -752,6 +784,471 @@ def _warmup_drain(units: Sequence[MuxScheduler],
         u.stats.finished.clear()
 
 
+class ServeSession:
+    """One serving run, decomposed into explicit steps.
+
+    The closed-loop driver (``serve_requests``) and the async front
+    end (``serving/frontend.py``) drive the SAME stepper: ``__init__``
+    does all setup (ownership map, clock install, SLO references,
+    injector threading, deadline stamping, drift monitor), ``step()``
+    runs exactly one loop iteration (submit due arrivals → tick busy
+    units or account an idle gap → drain fault events → watchdog →
+    reconfig/monitor), and ``report()`` rolls the timelines up.
+    Because the front end replays the identical iteration, open-loop
+    streamed serving is bit-identical to the closed-loop driver under
+    the deterministic clock by construction (asserted in
+    tests/test_frontend.py).
+
+    Front-end extensions (all default-off, None = closed-loop driver
+    semantics unchanged):
+
+    * ``route_fn(request) -> engine_name`` — cross-LLM routing
+      (serving/router.py), applied when a request is SUBMITTED (not at
+      trace build), so load-aware strategies see the live queue/pool
+      state at arrival time.  The request's ``model`` is rewritten to
+      the chosen engine.
+    * ``metrics`` — a ``ServingMetrics`` bundle (serving/metrics.py);
+      the session records the full taxonomy (lifecycle counters,
+      latency histograms, queue/pool gauges, reconfig/fault events)
+      and embeds the final snapshot in the report.
+    * ``on_topology_change()`` — called after a reconfiguration moves
+      engines across units, so a router can refresh its view.
+    * ``cancel(request)`` — client abandonment: frees the request's
+      queue position or slot + KV + prefix refs immediately, counted
+      as ``cancelled`` (DESIGN.md §14).
+
+    Wall-clock + reconfig (previously rejected): realtime SLO
+    references were calibrated ONCE at startup by solo probes, which
+    go stale when a migration moves an engine across meshes — and
+    re-probing mid-serving would splice probe compute into live
+    batches.  Instead of rejecting the combination, the session now
+    computes ANALYTIC references from a ``TickCostModel``
+    (``ref_cost``, default constants) with ``devices = the owning
+    mesh's size at evaluation time``: after a migration the reference
+    follows the engine to its new mesh with no probe traffic.  The
+    deterministic path is unchanged (devices=1 solo convention,
+    DESIGN.md §9).
+    """
+
+    def __init__(self, units: Sequence[MuxScheduler],
+                 requests: List[Request],
+                 slo_scales: Sequence[float] = DEFAULT_SLO_SCALES,
+                 cost: Optional[TickCostModel] = None,
+                 refs: Optional[Dict[str, SLORef]] = None,
+                 warm: bool = True,
+                 max_ticks: int = 500_000,
+                 planned_rates: Optional[Dict[str, float]] = None,
+                 reconfig: Optional[ReconfigController] = None,
+                 faults=None,
+                 recovery_cost: Optional[RecoveryCostModel] = None,
+                 watchdog_ticks: int = 1000,
+                 shed_scale: Optional[float] = None,
+                 ref_cost: Optional[TickCostModel] = None,
+                 metrics=None,
+                 route_fn: Optional[Callable[[Request], str]] = None,
+                 on_topology_change: Optional[Callable[[], None]] = None):
+        self.units = list(units)
+        self.owner: Dict[str, MuxScheduler] = {}
+        self.engines: Dict[str, Engine] = {}
+        for u in self.units:
+            for name, eng in u.engines.items():
+                assert name not in self.owner, \
+                    f"duplicate model {name} across units"
+                self.owner[name] = u
+                self.engines[name] = eng
+
+        self.cost = cost
+        self.deterministic = cost is not None
+        self.reconfig = reconfig
+        self.max_ticks = max_ticks
+        self.watchdog_ticks = watchdog_ticks
+        self.slo_scales = tuple(slo_scales)
+        self.metrics = metrics
+        self.route_fn = route_fn
+        self.on_topology_change = on_topology_change
+
+        if self.deterministic:
+            self.clock: Callable[[], float] = LogicalClock()
+            self.ref_fn = tick_cost_refs(self.engines, cost)
+        else:
+            if warm:
+                _warmup_drain(self.units, self.owner, requests)
+            if reconfig is not None:
+                # analytic wall-clock references (see class docstring):
+                # solo latency under ref_cost at the CURRENT owner's
+                # mesh size, so references follow migrated engines
+                rc = ref_cost if ref_cost is not None else TickCostModel()
+                chunk = {n: e.chunk_tokens
+                         for n, e in self.engines.items()}
+                owner = self.owner          # updated in place on moves
+
+                def ref_fn(model, plen, olen):
+                    u = owner.get(model)
+                    return rc.solo_reference(
+                        plen, olen, chunk.get(model),
+                        devices=(u.n_devices if u is not None else 1))
+                self.ref_fn = ref_fn
+            else:
+                slo = (refs if refs is not None
+                       else calibrate_slo_refs(self.engines))
+
+                def ref_fn(model, plen, olen, _slo=slo):
+                    return _slo[model].reference(plen, olen)
+                self.ref_fn = ref_fn
+            self.clock = WallClock()
+        for u in self.units:
+            u.clock = self.clock
+            for eng in u.engines.values():
+                eng.clock = self.clock
+
+        # fault injection: one injector serves every unit and the
+        # migration executor; recovery stalls are priced like any tick
+        self.injector: Optional[FaultInjector] = None
+        if faults is not None:
+            self.injector = (faults if isinstance(faults, FaultInjector)
+                             else FaultInjector(faults))
+            for u in self.units:
+                u.injector = self.injector
+            if reconfig is not None:
+                reconfig.executor.injector = self.injector
+        self.recovery_cost = (recovery_cost if recovery_cost is not None
+                              else RecoveryCostModel())
+
+        # deadline stamping for deadline-shedding units: the latest
+        # admission instant that still meets the scaled TTFT target at
+        # solo speed (ref with output_len 0 IS the solo TTFT reference,
+        # in both time domains).  Requests that will only resolve to an
+        # engine at submit time (family-routed) are stamped then, with
+        # the same formula.
+        self._deadline_models = {
+            n for u in self.units
+            if getattr(u, "shed_policy", "none") == "deadline"
+            for n in u.engines}
+        s = shed_scale if shed_scale is not None else max(self.slo_scales)
+        self._deadline_slack = max(s - 1.0, 0.0)
+        if self._deadline_models:
+            for r in requests:
+                if r.model in self._deadline_models:
+                    r.deadline = r.arrival + self._deadline_slack * \
+                        self.ref_fn(r.model, len(r.prompt), 0)
+
+        # drift monitor: the controller's when reconfiguring, a
+        # standalone one when only planned rates are known (drift stays
+        # visible in every report), none otherwise
+        self.monitor: Optional[WorkloadMonitor] = None
+        if reconfig is not None:
+            self.monitor = reconfig.monitor
+        elif planned_rates is not None:
+            self.monitor = WorkloadMonitor(planned_rates)
+        self.planned0 = dict(self.monitor.planned) if self.monitor else {}
+
+        self.requests = sorted(requests, key=lambda r: r.arrival)
+        self.idx, self.ticks = 0, 0
+        self.fault_log: List[dict] = []
+        self.fault_dt = 0.0
+        self.watchdog_trips = 0
+        self._stall_run, self._last_progress = 0, -1
+        self._submitted: set = set()             # id(request)
+        self._done = False
+        self._report: Optional[ServeReport] = None
+        # per-unit indexes into stats.finished / stats.shed, so metrics
+        # observation sees each disposition exactly once
+        self._fin_idx = [0] * len(self.units)
+        self._shed_idx = [0] * len(self.units)
+        self._wall0 = time.perf_counter()
+
+    # -- one loop iteration ---------------------------------------------
+    def step(self) -> Tuple[str, float]:
+        """Run ONE serving-loop iteration.  Returns ``(status, wait)``:
+
+        * ``("tick", 0.0)`` — at least one unit was busy and ticked;
+        * ``("idle", gap)`` — nothing pending until the next arrival.
+          Deterministic mode has already advanced the logical clock
+          over the gap (wait = 0); realtime callers should sleep up to
+          ``wait`` wall seconds (the driver naps ≤ 5 ms so arrivals
+          stay responsive) before stepping again;
+        * ``("done", 0.0)`` — trace drained (or ``max_ticks`` hit);
+          call ``report()``.
+        """
+        if self._done or (self.idx >= len(self.requests)
+                          and not any(u.pending() for u in self.units)):
+            self._done = True
+            return ("done", 0.0)
+        now = self.clock()
+        while (self.idx < len(self.requests)
+               and self.requests[self.idx].arrival <= now):
+            self._submit(self.requests[self.idx])
+            self.idx += 1
+        busy = [u for u in self.units if u.pending()]
+        status, wait = "tick", 0.0
+        if busy:
+            dt = 0.0
+            for u in busy:
+                p0, d0 = u.stats.prefill_tokens, u.stats.decode_tokens
+                u.tick()
+                if self.deterministic:
+                    if getattr(u, "enforce_shares", False):
+                        # spatial-temporal accounting: the tick's phase
+                        # meters + the unit's planned shares
+                        step = self.cost.tick_dt(u.tick_prefill_by,
+                                                 u.tick_decode_by,
+                                                 u.sm_frac,
+                                                 devices=u.n_devices)
+                    else:
+                        # legacy temporal accounting (no shares): every
+                        # job charged as if it held the whole mesh
+                        step = self.cost.dt(u.stats.prefill_tokens - p0,
+                                            u.stats.decode_tokens - d0,
+                                            devices=u.n_devices)
+                    dt = max(dt, step)
+            if self.deterministic:
+                self.clock.advance(dt)
+            self.ticks += 1
+            # recovery events recorded by this round's ticks: charge
+            # their modeled stall (deterministic mode — realtime pays
+            # the real teardown wall time) and fold them into the
+            # fault log
+            for u in busy:
+                for rec in u.fault_events:
+                    if self.deterministic:
+                        dt_r = self.recovery_cost.dt(
+                            rec.get("requeued", 0), rec.get("blocks", 0))
+                        self.clock.advance(dt_r)
+                        self.fault_dt += dt_r
+                        rec["dt_charged"] = dt_r
+                    self.fault_log.append(rec)
+                    if self.metrics is not None:
+                        self._observe_fault(rec)
+                u.fault_events.clear()
+            # watchdog: zero progress (no tokens moved, nothing
+            # finished or shed) across watchdog_ticks consecutive busy
+            # ticks means no recovery path is going to unwedge this —
+            # shed everything still pending so the run terminates with
+            # submitted = finished + shed (+ cancelled), and record
+            # the trip
+            progress = sum(u.stats.prefill_tokens + u.stats.decode_tokens
+                           + len(u.stats.finished) + len(u.stats.shed)
+                           for u in self.units)
+            if progress == self._last_progress:
+                self._stall_run += 1
+                if self.watchdog_ticks \
+                        and self._stall_run >= self.watchdog_ticks:
+                    shed_n = sum(u.shed_all("watchdog")
+                                 for u in self.units)
+                    self.watchdog_trips += 1
+                    self.fault_log.append(
+                        {"kind": "watchdog", "t": self.clock(),
+                         "shed": shed_n,
+                         "stalled_ticks": self._stall_run})
+                    if self.metrics is not None:
+                        self.metrics.watchdog_trips.inc()
+                        self.metrics.fault_events.inc(kind="watchdog")
+                    self._stall_run = 0
+            else:
+                self._stall_run = 0
+            self._last_progress = progress
+            if self.metrics is not None:
+                self._observe_tick(busy)
+            if self.ticks >= self.max_ticks:
+                self._done = True
+                return ("tick", 0.0)
+        elif self.idx < len(self.requests):
+            # idle until the next arrival
+            gap = max(self.requests[self.idx].arrival - now, 0.0)
+            if self.deterministic:
+                self.clock.advance(gap)
+                status, wait = "idle", 0.0
+            else:
+                status, wait = "idle", gap
+        if self.reconfig is not None:
+            ev = self.reconfig.step(self.clock())
+            if ev is not None:
+                if self.deterministic:
+                    # the migration's modeled stall hits every queued
+                    # and in-flight request, like any other tick cost
+                    self.clock.advance(ev.dt_charged)
+                if self.metrics is not None:
+                    self._observe_reconfig(ev)
+                if ev.moves:
+                    self.owner.update(self.reconfig.owner_map())
+                    if self.on_topology_change is not None:
+                        self.on_topology_change()
+        elif self.monitor is not None:
+            self.monitor.advance(self.clock())
+        return (status, wait)
+
+    # -- submission / cancellation ---------------------------------------
+    def _submit(self, r: Request) -> None:
+        if r.cancelled:
+            # cancelled before its arrival: never enters a unit, still
+            # counted (submitted = finished + shed + cancelled)
+            return
+        if self.route_fn is not None:
+            target = self.route_fn(r)
+            if target != r.model:
+                r.model = target
+            if (r.model in self._deadline_models
+                    and r.deadline == float("inf")):
+                r.deadline = r.arrival + self._deadline_slack * \
+                    self.ref_fn(r.model, len(r.prompt), 0)
+        self.owner[r.model].submit(r)
+        self._submitted.add(id(r))
+        if self.monitor is not None:
+            self.monitor.observe(r.model, len(r.prompt) + r.max_new_tokens)
+        if self.metrics is not None:
+            self.metrics.requests_submitted.inc(llm=r.model)
+            self.metrics.log.emit(self.clock(), "submit", r.req_id,
+                                  llm=r.model, prompt_len=len(r.prompt),
+                                  max_new=r.max_new_tokens)
+
+    def cancel(self, req: Request) -> bool:
+        """Client abandonment: free the request's resources NOW (queue
+        position, or slot + KV blocks + prefix refs via the owning
+        unit's ``cancel``).  A request cancelled before its arrival is
+        simply never submitted.  Returns True iff the disposition
+        changed to ``cancelled``."""
+        if req.finish >= 0 or req.shed or req.cancelled:
+            return False
+        if id(req) in self._submitted:
+            u = self.owner.get(req.model)
+            ok = bool(u is not None and u.cancel(req))
+        else:
+            req.cancelled = True
+            ok = True
+        if ok and self.metrics is not None:
+            self.metrics.requests_cancelled.inc(llm=req.model)
+            self.metrics.log.emit(self.clock(), "cancel", req.req_id,
+                                  llm=req.model)
+        return ok
+
+    # -- metrics observation (pure readers; never mutate serving state) --
+    def _observe_tick(self, busy: List[MuxScheduler]) -> None:
+        m = self.metrics
+        now = self.clock()
+        for u in busy:
+            for name, t in u.tick_prefill_by.items():
+                m.tokens_total.inc(t, llm=name, phase="prefill")
+            for name, t in u.tick_decode_by.items():
+                m.tokens_total.inc(t, llm=name, phase="decode")
+        for ui, u in enumerate(self.units):
+            fin = u.stats.finished
+            for r in fin[self._fin_idx[ui]:]:
+                m.requests_finished.inc(llm=r.model)
+                m.ttft_seconds.observe(r.first_token - r.arrival,
+                                       llm=r.model)
+                m.tpot_seconds.observe(
+                    (r.finish - r.first_token)
+                    / max(len(r.output) - 1, 1), llm=r.model)
+                m.e2e_seconds.observe(r.finish - r.arrival, llm=r.model)
+                m.log.emit(now, "finish", r.req_id, llm=r.model,
+                           tokens=len(r.output),
+                           ttft=r.first_token - r.arrival,
+                           e2e=r.finish - r.arrival)
+            self._fin_idx[ui] = len(fin)
+            shed = u.stats.shed
+            for r in shed[self._shed_idx[ui]:]:
+                m.requests_shed.inc(llm=r.model, reason=r.shed_reason)
+                m.log.emit(now, "shed", r.req_id, llm=r.model,
+                           reason=r.shed_reason)
+            self._shed_idx[ui] = len(shed)
+            for name, eng in u.engines.items():
+                m.queue_depth.set(len(u.queues[name]), llm=name)
+                m.running_seqs.set(len(eng.active_slots()), llm=name)
+                m.pool_used_blocks.set(eng.view.used, llm=name)
+            m.pool_available_blocks.set(u.pool.available_blocks(),
+                                        unit=f"mesh{u.mesh_id}")
+        if now > 1e-9:
+            for name in self.owner:
+                m.llm_qps.set(
+                    m.requests_submitted.value(llm=name) / now, llm=name)
+
+    def _observe_fault(self, rec: dict) -> None:
+        m = self.metrics
+        m.fault_events.inc(kind=rec.get("kind", "unknown"))
+        if rec.get("kind") == "engine_crash":
+            m.recoveries.inc(llm=rec.get("target") or "")
+        if rec.get("requeued"):
+            m.requests_retried.inc(rec["requeued"],
+                                   llm=rec.get("target") or "pool")
+        m.log.emit(self.clock(), "fault", "-",
+                   kind=rec.get("kind"), target=rec.get("target"),
+                   requeued=rec.get("requeued", 0))
+
+    def _observe_reconfig(self, ev) -> None:
+        m = self.metrics
+        m.reconfig_events.inc(kind="event")
+        if ev.moves:
+            m.reconfig_events.inc(len(ev.moves), kind="move")
+        if ev.migrated_blocks:
+            m.migrated_blocks.inc(ev.migrated_blocks)
+        m.log.emit(self.clock(), "reconfig", "-", moves=len(ev.moves),
+                   migrated_blocks=ev.migrated_blocks,
+                   requeued=ev.requeued)
+
+    # -- roll-up ----------------------------------------------------------
+    def report(self) -> ServeReport:
+        if self._report is not None:
+            return self._report
+        wall_s = time.perf_counter() - self._wall0
+        if self.monitor is not None:
+            self.monitor.advance(self.clock())  # close trailing windows
+
+        horizon = max([self.clock()]
+                      + [r.finish for r in self.requests if r.finish >= 0])
+        by_model: Dict[str, List[Request]] = {n: [] for n in self.engines}
+        for r in self.requests:
+            # family-named requests cancelled before routing keep their
+            # family name — give them their own row rather than losing
+            # them from the per-LLM accounting
+            by_model.setdefault(r.model, []).append(r)
+        per_llm = {n: _roll_up(n, rs, horizon, self.slo_scales, self.ref_fn)
+                   for n, rs in by_model.items()}
+        agg = _roll_up("aggregate", self.requests, horizon,
+                       self.slo_scales, self.ref_fn)
+        shares: Dict[str, float] = {}
+        prefix_stats: Dict[str, dict] = {}
+        for u in self.units:
+            if getattr(u, "enforce_shares", False):
+                shares.update({n: u.sm_frac.get(n, 1.0)
+                               for n in u.engines})
+            prefix_stats.update(u.prefix_stats())
+        injector, fault_log = self.injector, self.fault_log
+        fsum: Optional[FaultSummary] = None
+        if injector is not None or fault_log:
+            aborts = 0
+            if injector is not None:
+                aborts = sum(1 for rec in injector.records
+                             if rec.get("kind") == "migration_abort")
+            fsum = FaultSummary(
+                injected=(len(injector.records) if injector else 0),
+                unfired=(len(injector.unfired()) if injector else 0),
+                recoveries=sum(1 for rec in fault_log
+                               if rec["kind"] == "engine_crash"),
+                block_losses=sum(1 for rec in fault_log
+                                 if rec["kind"] == "block_loss"),
+                migration_aborts=aborts,
+                watchdog_trips=self.watchdog_trips,
+                requeued=sum(rec.get("requeued", 0) for rec in fault_log),
+                blocks_lost=sum(rec.get("blocks", 0) for rec in fault_log
+                                if rec["kind"] == "block_loss"),
+                dt_charged=self.fault_dt,
+                log=fault_log)
+        self._report = ServeReport(
+            horizon=horizon, wall_s=wall_s, ticks=self.ticks,
+            deterministic=self.deterministic, slo_scales=self.slo_scales,
+            per_llm=per_llm, aggregate=agg,
+            planned_rates=self.planned0,
+            rate_estimates=(dict(self.monitor.rate_ewma)
+                            if self.monitor else {}),
+            sm_frac=shares,
+            reconfig=(ReconfigSummary.of(self.reconfig.events)
+                      if self.reconfig is not None else None),
+            faults=fsum, prefix=prefix_stats,
+            metrics=(self.metrics.snapshot()
+                     if self.metrics is not None else None))
+        return self._report
+
+
 def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                    slo_scales: Sequence[float] = DEFAULT_SLO_SCALES,
                    cost: Optional[TickCostModel] = None,
@@ -763,10 +1260,14 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                    faults=None,
                    recovery_cost: Optional[RecoveryCostModel] = None,
                    watchdog_ticks: int = 1000,
-                   shed_scale: Optional[float] = None
+                   shed_scale: Optional[float] = None,
+                   ref_cost: Optional[TickCostModel] = None,
+                   metrics=None
                    ) -> ServeReport:
     """Drive real units through an arrival-ordered request list and
-    roll the ``Request`` timelines up into a ``ServeReport``.
+    roll the ``Request`` timelines up into a ``ServeReport`` — the
+    closed-loop driver, now a thin synchronous wrapper over
+    ``ServeSession`` (the async front end drives the same stepper).
 
     ``cost`` set → deterministic mode: a ``LogicalClock`` advances by
     the max per-unit tick cost each iteration (units are parallel
@@ -784,7 +1285,12 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     ``ReconfigController`` (serving/reconfig.py): the loop reports
     arrivals, calls ``step`` each iteration, charges executed events'
     modeled stall to the logical clock (deterministic mode) and
-    refreshes request routing after engine moves.
+    refreshes request routing after engine moves.  Wall-clock +
+    reconfig is supported: SLO references are then computed
+    analytically from ``ref_cost`` (default ``TickCostModel()``) at
+    the owning mesh's CURRENT size — they follow migrated engines
+    instead of going stale like startup solo probes would (``refs``
+    is ignored in that combination; see ``ServeSession``).
 
     Graceful degradation (DESIGN.md §12).  ``faults`` (a ``FaultPlan``
     or ``FaultInjector``) arms fault injection: the injector is
@@ -804,8 +1310,13 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     consecutive busy ticks with zero progress — no tokens, finishes or
     sheds) into a recorded degradation event: every queued and
     in-flight request is shed, so the loop terminates with
-    ``submitted = finished + shed`` instead of hanging.
+    ``submitted = finished + shed + cancelled`` instead of hanging.
     ``watchdog_ticks=0`` disables it.
+
+    ``metrics`` (a ``ServingMetrics``) arms the observability layer:
+    lifecycle counters, latency histograms, queue/pool gauges and
+    reconfig/fault event counters are recorded live and the final
+    snapshot is embedded in the report (``ServeReport.metrics``).
 
     CAVEAT (realtime + multiple units): units are ticked sequentially
     on one host thread under ONE wall clock, so each mesh's latencies
@@ -814,220 +1325,19 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
     placements with different mesh counts; it models units as
     parallel.
     """
-    owner: Dict[str, MuxScheduler] = {}
-    engines: Dict[str, Engine] = {}
-    for u in units:
-        for name, eng in u.engines.items():
-            assert name not in owner, f"duplicate model {name} across units"
-            owner[name] = u
-            engines[name] = eng
-
-    deterministic = cost is not None
-    if reconfig is not None and not deterministic:
-        # realtime SLO references are calibrated ONCE at startup by
-        # solo probes; a migration that lands an engine on a different
-        # mesh leaves its reference stale, and re-probing mid-serving
-        # would splice probe compute into live batches (corrupting the
-        # very latencies being measured).  Deterministic mode has
-        # analytic references that never go stale — use it.
-        raise ValueError(
-            "live reconfiguration requires the deterministic clock "
-            "(pass cost=TickCostModel()): realtime mode keeps its "
-            "startup-calibrated solo-probe SLO references, which go "
-            "stale when a migration moves an engine across meshes")
-    if deterministic:
-        clock: Callable[[], float] = LogicalClock()
-        ref_fn = tick_cost_refs(engines, cost)
-    else:
-        if warm:
-            _warmup_drain(units, owner, requests)
-        slo = refs if refs is not None else calibrate_slo_refs(engines)
-        def ref_fn(model, plen, olen, _slo=slo):
-            return _slo[model].reference(plen, olen)
-        clock = WallClock()
-    for u in units:
-        u.clock = clock
-        for eng in u.engines.values():
-            eng.clock = clock
-
-    # fault injection: one injector serves every unit and the
-    # migration executor; recovery stalls are priced like any tick
-    injector: Optional[FaultInjector] = None
-    if faults is not None:
-        injector = (faults if isinstance(faults, FaultInjector)
-                    else FaultInjector(faults))
-        for u in units:
-            u.injector = injector
-        if reconfig is not None:
-            reconfig.executor.injector = injector
-    if recovery_cost is None:
-        recovery_cost = RecoveryCostModel()
-
-    # deadline stamping for deadline-shedding units: the latest
-    # admission instant that still meets the scaled TTFT target at
-    # solo speed (ref with output_len 0 IS the solo TTFT reference,
-    # in both time domains)
-    deadline_models = {n for u in units
-                       if getattr(u, "shed_policy", "none") == "deadline"
-                       for n in u.engines}
-    if deadline_models:
-        s = shed_scale if shed_scale is not None else max(slo_scales)
-        slack = max(s - 1.0, 0.0)
-        for r in requests:
-            if r.model in deadline_models:
-                r.deadline = r.arrival + slack * ref_fn(r.model,
-                                                        len(r.prompt), 0)
-
-    # drift monitor: the controller's when reconfiguring, a standalone
-    # one when only planned rates are known (drift stays visible in
-    # every report), none otherwise
-    monitor: Optional[WorkloadMonitor] = None
-    if reconfig is not None:
-        monitor = reconfig.monitor
-    elif planned_rates is not None:
-        monitor = WorkloadMonitor(planned_rates)
-    planned0 = dict(monitor.planned) if monitor else {}
-
-    requests = sorted(requests, key=lambda r: r.arrival)
-    idx, ticks = 0, 0
-    fault_log: List[dict] = []
-    fault_dt = 0.0
-    watchdog_trips = 0
-    stall_run, last_progress = 0, -1
-    wall0 = time.perf_counter()
-    while idx < len(requests) or any(u.pending() for u in units):
-        now = clock()
-        while idx < len(requests) and requests[idx].arrival <= now:
-            r = requests[idx]
-            owner[r.model].submit(r)
-            if monitor is not None:
-                monitor.observe(r.model, len(r.prompt) + r.max_new_tokens)
-            idx += 1
-        busy = [u for u in units if u.pending()]
-        if busy:
-            dt = 0.0
-            for u in busy:
-                p0, d0 = u.stats.prefill_tokens, u.stats.decode_tokens
-                u.tick()
-                if deterministic:
-                    if getattr(u, "enforce_shares", False):
-                        # spatial-temporal accounting: the tick's phase
-                        # meters + the unit's planned shares
-                        step = cost.tick_dt(u.tick_prefill_by,
-                                            u.tick_decode_by, u.sm_frac,
-                                            devices=u.n_devices)
-                    else:
-                        # legacy temporal accounting (no shares): every
-                        # job charged as if it held the whole mesh
-                        step = cost.dt(u.stats.prefill_tokens - p0,
-                                       u.stats.decode_tokens - d0,
-                                       devices=u.n_devices)
-                    dt = max(dt, step)
-            if deterministic:
-                clock.advance(dt)
-            ticks += 1
-            # recovery events recorded by this round's ticks: charge
-            # their modeled stall (deterministic mode — realtime pays
-            # the real teardown wall time) and fold them into the
-            # fault log
-            for u in busy:
-                for rec in u.fault_events:
-                    if deterministic:
-                        dt_r = recovery_cost.dt(rec.get("requeued", 0),
-                                                rec.get("blocks", 0))
-                        clock.advance(dt_r)
-                        fault_dt += dt_r
-                        rec["dt_charged"] = dt_r
-                    fault_log.append(rec)
-                u.fault_events.clear()
-            # watchdog: zero progress (no tokens moved, nothing
-            # finished or shed) across watchdog_ticks consecutive busy
-            # ticks means no recovery path is going to unwedge this —
-            # shed everything still pending so the run terminates with
-            # submitted = finished + shed, and record the trip
-            progress = sum(u.stats.prefill_tokens + u.stats.decode_tokens
-                           + len(u.stats.finished) + len(u.stats.shed)
-                           for u in units)
-            if progress == last_progress:
-                stall_run += 1
-                if watchdog_ticks and stall_run >= watchdog_ticks:
-                    shed_n = sum(u.shed_all("watchdog") for u in units)
-                    watchdog_trips += 1
-                    fault_log.append({"kind": "watchdog", "t": clock(),
-                                      "shed": shed_n,
-                                      "stalled_ticks": stall_run})
-                    stall_run = 0
-            else:
-                stall_run = 0
-            last_progress = progress
-            if ticks >= max_ticks:
-                break
-        elif idx < len(requests):
-            # idle until the next arrival
-            gap = requests[idx].arrival - now
-            if deterministic:
-                clock.advance(max(gap, 0.0))
-            else:
-                time.sleep(min(max(gap, 0.0), 0.005))
-        if reconfig is not None:
-            ev = reconfig.step(clock())
-            if ev is not None:
-                if deterministic:
-                    # the migration's modeled stall hits every queued
-                    # and in-flight request, like any other tick cost
-                    clock.advance(ev.dt_charged)
-                if ev.moves:
-                    owner.update(reconfig.owner_map())
-        elif monitor is not None:
-            monitor.advance(clock())
-    wall_s = time.perf_counter() - wall0
-    if monitor is not None:
-        monitor.advance(clock())           # close trailing windows
-
-    horizon = max([clock()] + [r.finish for r in requests if r.finish >= 0])
-    by_model: Dict[str, List[Request]] = {n: [] for n in engines}
-    for r in requests:
-        by_model[r.model].append(r)
-    scales = tuple(slo_scales)
-    per_llm = {n: _roll_up(n, rs, horizon, scales, ref_fn)
-               for n, rs in by_model.items()}
-    agg = _roll_up("aggregate", requests, horizon, scales, ref_fn)
-    shares: Dict[str, float] = {}
-    prefix_stats: Dict[str, dict] = {}
-    for u in units:
-        if getattr(u, "enforce_shares", False):
-            shares.update({n: u.sm_frac.get(n, 1.0) for n in u.engines})
-        prefix_stats.update(u.prefix_stats())
-    fsum: Optional[FaultSummary] = None
-    if injector is not None or fault_log:
-        aborts = 0
-        if injector is not None:
-            aborts = sum(1 for rec in injector.records
-                         if rec.get("kind") == "migration_abort")
-        fsum = FaultSummary(
-            injected=(len(injector.records) if injector else 0),
-            unfired=(len(injector.unfired()) if injector else 0),
-            recoveries=sum(1 for rec in fault_log
-                           if rec["kind"] == "engine_crash"),
-            block_losses=sum(1 for rec in fault_log
-                             if rec["kind"] == "block_loss"),
-            migration_aborts=aborts,
-            watchdog_trips=watchdog_trips,
-            requeued=sum(rec.get("requeued", 0) for rec in fault_log),
-            blocks_lost=sum(rec.get("blocks", 0) for rec in fault_log
-                            if rec["kind"] == "block_loss"),
-            dt_charged=fault_dt,
-            log=fault_log)
-    return ServeReport(
-        horizon=horizon, wall_s=wall_s, ticks=ticks,
-        deterministic=deterministic, slo_scales=scales,
-        per_llm=per_llm, aggregate=agg,
-        planned_rates=planned0,
-        rate_estimates=(dict(monitor.rate_ewma) if monitor else {}),
-        sm_frac=shares,
-        reconfig=(ReconfigSummary.of(reconfig.events)
-                  if reconfig is not None else None),
-        faults=fsum, prefix=prefix_stats)
+    session = ServeSession(
+        units, requests, slo_scales=slo_scales, cost=cost, refs=refs,
+        warm=warm, max_ticks=max_ticks, planned_rates=planned_rates,
+        reconfig=reconfig, faults=faults, recovery_cost=recovery_cost,
+        watchdog_ticks=watchdog_ticks, shed_scale=shed_scale,
+        ref_cost=ref_cost, metrics=metrics)
+    while True:
+        status, wait = session.step()
+        if status == "done":
+            break
+        if status == "idle" and not session.deterministic:
+            time.sleep(min(wait, 0.005))
+    return session.report()
 
 
 def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
@@ -1040,7 +1350,9 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                    faults=None,
                    recovery_cost: Optional[RecoveryCostModel] = None,
                    watchdog_ticks: int = 1000,
-                   shed_scale: Optional[float] = None
+                   shed_scale: Optional[float] = None,
+                   ref_cost: Optional[TickCostModel] = None,
+                   metrics=None
                    ) -> ServeReport:
     """``serve_requests`` over a ``core/workload.py`` trace (the shared
     simulator/runtime arrival process).  The trace's per-LLM rates
@@ -1055,4 +1367,5 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                           planned_rates=dict(wl.rates), reconfig=reconfig,
                           faults=faults, recovery_cost=recovery_cost,
                           watchdog_ticks=watchdog_ticks,
-                          shed_scale=shed_scale)
+                          shed_scale=shed_scale, ref_cost=ref_cost,
+                          metrics=metrics)

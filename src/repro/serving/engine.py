@@ -37,7 +37,7 @@ import time
 from collections import Counter
 from dataclasses import dataclass, field
 from functools import lru_cache, partial
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -96,6 +96,11 @@ class Request:
     shed: bool = False
     shed_reason: str = ""
     requeues: int = 0
+    # client abandonment (DESIGN.md §14): the third disposition next to
+    # finished/shed — ``MuxScheduler.cancel`` frees the request's slot,
+    # KV blocks and prefix refs immediately and reports preserve
+    # ``submitted = finished + shed + cancelled``
+    cancelled: bool = False
 
     @property
     def done(self) -> bool:
@@ -262,6 +267,15 @@ class Engine:
         self._rolled_rows: List[int] = []
         self._next_seq = 0
         self._rng = np.random.default_rng(rng_seed)
+        # token-emission hook (serving/frontend.py): called as
+        # ``emit(event, request, token)`` at every COMMITTED progress
+        # point — "token" (an output token survived its reserve/validate
+        # step; rolled-back tokens never emit), "finish" (request
+        # finalized), "reset" (an eviction cleared the request's
+        # progress; previously streamed tokens are void).  Installed by
+        # ``MuxScheduler.set_emit`` (which re-applies it to engines
+        # rebuilt by crash recovery); None = no streaming consumer.
+        self.emit: Optional[Callable[[str, Request, int], None]] = None
 
         # SSM per-slot state
         if cfg.ssm:
@@ -341,6 +355,8 @@ class Engine:
             r.output.clear()
             r.prefill_done = -1.0
             r.first_token = -1.0
+            if self.emit is not None:
+                self.emit("reset", r, -1)
             out.append(r)
         self._prefilling.clear()
         return out
@@ -367,6 +383,8 @@ class Engine:
             r.output.clear()
             r.prefill_done = -1.0
             r.first_token = -1.0
+            if self.emit is not None:
+                self.emit("reset", r, -1)
             out.append(r)
         return out
 
@@ -385,6 +403,8 @@ class Engine:
         self.slots[slot] = None
         self.slot_seq[slot] = -1
         self.finished.append(r)
+        if self.emit is not None:
+            self.emit("finish", r, -1)
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -487,6 +507,8 @@ class Engine:
             if self.view.append_tokens(seq_ids[i], 1):
                 r.output.append(int(nxt[i]))
                 r.first_token = self.clock()
+                if self.emit is not None:
+                    self.emit("token", r, int(nxt[i]))
                 if r.done:
                     # max_new_tokens == 1: the prefill-committed token
                     # IS the whole output — finalize here, or a decode
@@ -603,6 +625,8 @@ class Engine:
                 if self.view.append_tokens(r._seq_id, 1):
                     r.output.append(int(nxt[i]))
                     r.first_token = self.clock()
+                    if self.emit is not None:
+                        self.emit("token", r, int(nxt[i]))
                     if r.done:
                         # max_new_tokens == 1 completes at prefill
                         self._finish_slot(sl, r)
@@ -687,11 +711,19 @@ class Engine:
                     # prefill's first token rolled back on overcommit
                     # and decode regenerated it — TTFT ends here
                     r.first_token = self.clock()
+                if self.emit is not None:
+                    self.emit("token", r, int(nxt[i]))
                 self._finish_slot(job.slots[i], r)
             else:
                 ok = self.view.append_tokens(job.seq_ids[i], 1)
-                if ok and r.first_token < 0:
-                    r.first_token = self.clock()
+                if ok:
+                    if r.first_token < 0:
+                        r.first_token = self.clock()
+                    # emit only AFTER the reserve validated: a token that
+                    # rolls back below was never committed and must not
+                    # reach a stream
+                    if self.emit is not None:
+                        self.emit("token", r, int(nxt[i]))
                 if not ok:
                     # quota overcommit (admitted sequences' future
                     # growth is not reserved, and adapt_quotas may
@@ -739,6 +771,8 @@ class Engine:
         r.output.clear()
         r.prefill_done = -1.0
         r.first_token = -1.0
+        if self.emit is not None:
+            self.emit("reset", r, -1)
         self.preempted.append(r)
 
     def decode(self, job: Optional[DecodeJob] = None) -> int:

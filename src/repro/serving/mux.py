@@ -69,6 +69,10 @@ class MuxStats:
     # Each carries its ``shed_reason``; the driver rolls them up as
     # SLO misses with a visible disposition, never silent losses.
     shed: List[Request] = field(default_factory=list)
+    # client-abandoned requests (DESIGN.md §14): the third disposition —
+    # the server stayed healthy, the CLIENT walked away; reports keep
+    # ``submitted = finished + shed + cancelled``
+    cancelled: List[Request] = field(default_factory=list)
     prefill_tokens: int = 0
     decode_tokens: int = 0
     ticks: int = 0
@@ -295,6 +299,8 @@ class MuxScheduler:
         self.clock = clock if clock is not None else time.perf_counter
         for eng in engines.values():
             eng.clock = self.clock
+        # token-emission hook (serving/frontend.py) — see ``set_emit``
+        self.emit = None
         # fused multi-LLM tick (DESIGN.md §2): group colocated engines
         # by fusion signature; members adopt ONE stacked weight tree
         # per group (zero-copy) for the lifetime of the scheduler, and
@@ -423,11 +429,25 @@ class MuxScheduler:
         self.queues[name] = deque(queued)
         self.sm_frac[name] = float(sm_frac)
         eng.clock = self.clock
+        eng.emit = self.emit
         self._names = list(self.engines)
         self._prefill_rr = self._decode_rr = 0
         self.rebuild_fused_groups()
 
     # ------------------------------------------------------------------
+    def set_emit(self, fn) -> None:
+        """Install the token-emission hook on this unit and every
+        engine it hosts: ``fn(event, request, token)`` with events
+        "token" / "finish" / "reset" (engine-level commit points),
+        "shed" and "cancelled" (scheduler dispositions).  ``add_engine``
+        re-applies the hook, so engines rebuilt by crash recovery or
+        adopted after a migration keep streaming (the fused sweeps need
+        no wiring of their own — they commit through the member
+        engines' ``apply_*_result``)."""
+        self.emit = fn
+        for eng in self.engines.values():
+            eng.emit = fn
+
     def submit(self, req: Request) -> None:
         q = self.queues[req.model]
         if (self.shed_policy != "none" and self.max_queue is not None
@@ -451,6 +471,8 @@ class MuxScheduler:
         req.shed = True
         req.shed_reason = reason
         self.stats.shed.append(req)
+        if self.emit is not None:
+            self.emit("shed", req, -1)
 
     def _shed_expired(self) -> None:
         """Deadline-aware shedding: pop queue heads whose admission
@@ -462,6 +484,45 @@ class MuxScheduler:
         for q in self.queues.values():
             while q and q[0].deadline < now:
                 self._shed(q.popleft(), "deadline")
+
+    def cancel(self, req: Request) -> bool:
+        """Client abandonment (DESIGN.md §14): release everything the
+        request holds NOW — its queue position, or its engine slot plus
+        KV blocks and prefix-index refs (``evict_seqs`` → ``free_seq``
+        drops shared-prefix refcounts with the rest) — and record the
+        ``cancelled`` disposition.  Distinct from shedding: the server
+        sheds to protect itself, the client cancels; the roll-up keeps
+        ``submitted = finished + shed + cancelled``.  Returns False
+        when the request already finished, was shed, or isn't held by
+        this unit (nothing to free)."""
+        if req.cancelled or req.shed or req.finish >= 0:
+            return False
+        removed = False
+        q = self.queues.get(req.model)
+        if q is not None and req in q:
+            q.remove(req)
+            removed = True
+        else:
+            eng = self.engines.get(req.model)
+            if eng is not None:
+                if req in eng.preempted:
+                    # evicted this tick, awaiting requeue — drop it
+                    # before _harvest puts it back on the queue
+                    eng.preempted.remove(req)
+                    removed = True
+                else:
+                    for slot in eng.active_slots():
+                        if eng.slots[slot] is req:
+                            eng.evict_seqs([int(eng.slot_seq[slot])])
+                            removed = True
+                            break
+        if not removed:
+            return False
+        req.cancelled = True
+        self.stats.cancelled.append(req)
+        if self.emit is not None:
+            self.emit("cancelled", req, -1)
+        return True
 
     def _apply_faults(self) -> None:
         """Tick preamble: fire due plan events for this unit and track

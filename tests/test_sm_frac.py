@@ -216,17 +216,25 @@ def test_report_surfaces_shares():
     assert rep.to_json()["sm_frac"]["hot"] == 0.5
 
 
-def test_realtime_rejects_reconfig():
-    """Wall-clock serving calibrates solo-probe SLO references once at
-    startup; combining it with live reconfiguration must fail loudly
-    instead of serving stale references after a migration."""
+def test_realtime_accepts_reconfig_with_analytic_refs():
+    """Wall-clock + reconfig used to be rejected (startup solo-probe
+    references go stale after a migration).  The driver now computes
+    ANALYTIC references from a TickCostModel at the owning mesh's
+    current size, so the combination is accepted and references follow
+    migrated engines without probe traffic."""
     from repro.serving.reconfig import ReconfigController
     pl = _shared_plan()
     units = units_from_placement(pl, pool_blocks=12_000, max_slots=2,
                                  chunk_tokens=16)
     ctrl = ReconfigController(pl, units)
-    with pytest.raises(ValueError, match="deterministic"):
-        serve_requests(units, [], cost=None, warm=False, reconfig=ctrl)
+    rep = serve_requests(units, [], cost=None, warm=False, reconfig=ctrl)
+    assert not rep.deterministic
+    assert rep.aggregate.submitted == 0
+    # the analytic reference must be devices-aware: the same request
+    # shape is cheaper on a wider mesh
+    c = COST
+    assert c.solo_reference(64, 8, 16, devices=4) \
+        < c.solo_reference(64, 8, 16, devices=1)
 
 
 # ---------------------------------------------------------------------------
