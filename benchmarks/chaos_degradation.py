@@ -61,7 +61,7 @@ def _attainment(rep) -> dict:
 def _assert_exactly_once(rep, n_requests: int, tag: str) -> None:
     agg = rep.aggregate
     assert agg.submitted == n_requests, (tag, agg.submitted, n_requests)
-    assert agg.submitted == agg.finished + agg.shed, \
+    assert agg.submitted == agg.finished + agg.shed,\
         (tag, "every request must finish or be shed — exactly once",
          agg.submitted, agg.finished, agg.shed)
     per = rep.per_llm.values()
@@ -96,13 +96,33 @@ def run(quick: bool = False, max_rate: float = 10.0, horizon: float = 4.0,
         faults=FaultPlan.random(names, horizon, 0.0, seed=11,
                                 pool_blocks=pool_blocks))
     out["runs"]["baseline"] = base.to_json()
-    assert _attainment(base) == _attainment(sev0), \
+    assert _attainment(base) == _attainment(sev0),\
         ("severity-0 chaos must reproduce the baseline bit-for-bit",
          _attainment(base), _attainment(sev0))
     assert base.horizon == sev0.horizon and base.ticks == sev0.ticks
     assert sev0.faults is not None and sev0.faults.injected == 0
     print(f"[chaos] parity: severity-0 == baseline "
           f"({base.ticks} ticks, attainment bit-identical)")
+
+    # ---- gate 1b: the invariant sanitizer is a pure reader -----------
+    # (serving/sanitize.py, DESIGN.md §15): the same severity-0 run
+    # with every-tick invariant checking on must reproduce the
+    # unsanitized report bit-for-bit — wall_s is the one field allowed
+    # to differ (real elapsed wall time, a diagnostic).
+    sev0_san = serve_workload(
+        [_unit(names, wl.rates, pool_blocks, True)], wl, seed=1,
+        slo_scales=SLO_SCALES, cost=COST,
+        faults=FaultPlan.random(names, horizon, 0.0, seed=11,
+                                pool_blocks=pool_blocks),
+        sanitize=True)
+    plain, sanitized = sev0.to_json(), sev0_san.to_json()
+    plain.pop("wall_s"), sanitized.pop("wall_s")
+    assert plain == sanitized,\
+        ("a sanitized run must be bit-identical to an unsanitized one "
+         "(the sanitizer is a pure reader)")
+    print(f"[chaos] sanitize parity: severity-0 with MUXSERVE_SANITIZE "
+          f"semantics == plain run, bit-identical over {sev0.ticks} "
+          f"checked ticks")
 
     # ---- gate 2: nested severity sweep degrades monotonically --------
     means = []
@@ -125,7 +145,7 @@ def run(quick: bool = False, max_rate: float = 10.0, horizon: float = 4.0,
               f"lost, mean attainment {mean:.4f}")
     out["mean_attainment_by_severity"] = means
     for lo, hi in zip(means[1:], means[:-1]):
-        assert lo <= hi + 1e-9, \
+        assert lo <= hi + 1e-9,\
             ("attainment must degrade monotonically with fault severity "
              "(nested plans)", means)
     print(f"[chaos] monotone degradation: {[f'{m:.4f}' for m in means]}")
@@ -145,7 +165,7 @@ def run(quick: bool = False, max_rate: float = 10.0, horizon: float = 4.0,
         shed_scale=2.0)
     _assert_exactly_once(rep, len(wl2.requests), "overload")
     assert rep.faults.recoveries == 1, rep.faults.to_json()
-    assert rep.aggregate.shed > 0, \
+    assert rep.aggregate.shed > 0,\
         "a 2× burst over bounded queues must shed deliberately"
     out["runs"]["overload_crash"] = rep.to_json()
     print(f"[chaos] overload+crash: {rep.aggregate.finished} finished, "

@@ -4,14 +4,12 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict
 
-import numpy as np
 
-from repro.core.placement import Placement, place, place_spatial
+from repro.core.placement import place, place_spatial
 from repro.core.simulator import SimReport, simulate
-from repro.core.workload import (Workload, power_law_rates, synthesize,
-                                 table1_models)
+from repro.core.workload import Workload, synthesize, table1_models
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "experiments/results")
 

@@ -34,7 +34,6 @@ def run(quick: bool = False) -> dict:
     for alpha in (ALPHAS[:1] if quick else ALPHAS):
         rates = power_law_rates([c.name for c in cfgs], alpha,
                                 max_rate=8.0)
-        models = [(c, rates[c.name]) for c in cfgs]
         wl = synthesize([c.name for c in cfgs], alpha=alpha,
                         max_rate=8.0, horizon=30.0, seed=0)
         wl.rates = rates

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.core.workload import power_law_rates
 
-from benchmarks.common import paper_models, save, three_systems, \
+from benchmarks.common import paper_models, save, three_systems,\
     workload_for
 
 ALPHAS = [0.7, 2.1]

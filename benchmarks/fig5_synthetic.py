@@ -10,7 +10,6 @@ large α.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.workload import power_law_rates
 

@@ -4,7 +4,7 @@ sweep the average rate.  Paper band: up to 1.38×/1.46× over
 spatial/temporal at SLO scale 8."""
 from __future__ import annotations
 
-from repro.core.workload import chatlmsys_like, llama_config, table1_models
+from repro.core.workload import chatlmsys_like, llama_config
 
 from benchmarks.common import report_row, save, three_systems
 

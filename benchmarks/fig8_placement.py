@@ -18,7 +18,7 @@ def _setting(scale: str):
         rates = [9.0, 5.0, 1.2, 0.8]      # 50% popular, >70% traffic
         n_dev = 8
     else:
-        cfgs = [llama_config("llama-7b", f"-{i}") for i in range(4)] + \
+        cfgs = [llama_config("llama-7b", f"-{i}") for i in range(4)] +\
             [llama_config("llama-13b", "-x"), llama_config("llama-13b", "-y"),
              llama_config("llama-30b", "-z")]
         rates = [10.0, 7.0, 4.0, 1.0, 0.8, 0.6, 0.4]

@@ -132,7 +132,7 @@ def run(quick: bool = False, max_rate: float = 48.0,
     by_id = {r.req_id: r for r in reqs_a}
     for r in reqs_b:
         stream = outs[r.req_id]
-        assert stream == by_id[r.req_id].output == r.output, \
+        assert stream == by_id[r.req_id].output == r.output,\
             ("streamed tokens must equal the closed-loop output "
              "bit-for-bit", r.req_id)
     assert _attainment(rep_closed) == _attainment(rep_stream)
@@ -152,10 +152,10 @@ def run(quick: bool = False, max_rate: float = 48.0,
     for s in SLO_SCALES:
         print(f"[frontend] scale {s}: round_robin {att_rr[s]:.4f}  "
               f"least_loaded {att_ll[s]:.4f}")
-    assert all(att_ll[s] >= att_rr[s] - 1e-9 for s in SLO_SCALES), \
+    assert all(att_ll[s] >= att_rr[s] - 1e-9 for s in SLO_SCALES),\
         ("least-loaded routing must not lose to round-robin at any "
          "scale", att_ll, att_rr)
-    assert any(att_ll[s] > att_rr[s] + 1e-9 for s in SLO_SCALES), \
+    assert any(att_ll[s] > att_rr[s] + 1e-9 for s in SLO_SCALES),\
         ("least-loaded routing must strictly beat round-robin at some "
          "scale on the skewed unequal-mesh topology", att_ll, att_rr)
 
@@ -173,13 +173,13 @@ def run(quick: bool = False, max_rate: float = 48.0,
               if s["value"] > 0}
     ttft_obs = {s["labels"]["llm"]: s["count"]
                 for s in fams["mux_ttft_seconds"]["series"]}
-    assert all(ttft_obs.get(n, 0) == c for n, c in served.items()), \
+    assert all(ttft_obs.get(n, 0) == c for n, c in served.items()),\
         ("every finished request must land in its TTFT histogram",
          served, ttft_obs)
     decisions = sum(s["value"]
                     for s in fams["mux_router_decisions_total"]["series"]
                     if s["labels"]["strategy"] == "least_loaded")
-    assert decisions == rep_ll.aggregate.submitted, \
+    assert decisions == rep_ll.aggregate.submitted,\
         ("every submitted request routes through the strategy",
          decisions, rep_ll.aggregate.submitted)
     qps = {s["labels"]["llm"]: s["value"]

@@ -124,7 +124,7 @@ def run(quick: bool = False) -> dict:
         finished = mux.stats.finished[base_finished:]
         assert len(finished) == n, (len(finished), n)
         assert ticks >= 50, f"need a ≥50-tick measured drain, got {ticks}"
-        assert traces_measured == 0, \
+        assert traces_measured == 0,\
             f"shape-stable serving must not re-trace ({traces_measured})"
         outputs[fused] = {r.req_id: r.output for r in finished}
         mode = "fused" if fused else "serial"
@@ -155,9 +155,9 @@ def run(quick: bool = False) -> dict:
               f"{m['pool_hbm_bytes'] / 1e6:.0f} MB pool, "
               f"{len(mux.fused_groups)} fused groups)")
 
-    assert len(outputs[True]) == len(outputs[False]) == 2 * n_models \
+    assert len(outputs[True]) == len(outputs[False]) == 2 * n_models\
         * n_per_model, "req ids must be unique across measured waves"
-    assert outputs[True] == outputs[False], \
+    assert outputs[True] == outputs[False],\
         "fused and serial ticks must produce identical tokens"
     out["parity"] = True
     s, f = out["modes"]["serial"], out["modes"]["fused"]

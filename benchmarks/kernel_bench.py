@@ -105,7 +105,7 @@ def run(quick: bool = False) -> dict:
                  f"1 sweep x {M * 4} rows"))
 
     # SSD scan
-    b2, s2, h2, p2, n2 = (1, 128, 2, 64, 32) if quick \
+    b2, s2, h2, p2, n2 = (1, 128, 2, 64, 32) if quick\
         else (1, 512, 4, 64, 64)
     x = jax.random.normal(key, (b2, s2, h2, p2), jnp.float32)
     dt = jax.nn.softplus(jax.random.normal(key, (b2, s2, h2))) * 0.1

@@ -87,7 +87,7 @@ def run(quick: bool = False, max_rate: float = 12.0, horizon: float = 4.0,
     # prefixes differ.  Anything else would make gate 2 meaningless.
     for r, wl in traces.items():
         assert [(q.model, q.arrival, q.prompt_len, q.output_len)
-                for q in wl.requests] == \
+                for q in wl.requests] ==\
                [(q.model, q.arrival, q.prompt_len, q.output_len)
                 for q in wl0.requests], f"reuse sweep not nested at {r}"
 
@@ -107,7 +107,7 @@ def run(quick: bool = False, max_rate: float = 12.0, horizon: float = 4.0,
     on0 = _serve(names, rates, wl0, pool_blocks, cache=True)
     out["runs"]["reuse_0.0_off"] = base0.to_json()
     out["runs"]["reuse_0.0_on"] = on0.to_json()
-    assert _attainment(base0) == _attainment(on0), \
+    assert _attainment(base0) == _attainment(on0),\
         ("a never-hitting cache must reproduce the uncached run "
          "bit-for-bit", _attainment(base0), _attainment(on0))
     assert base0.ticks == on0.ticks and base0.horizon == on0.horizon
@@ -134,7 +134,7 @@ def run(quick: bool = False, max_rate: float = 12.0, horizon: float = 4.0,
               f"{rep.aggregate.ttft.p50:.3f}s, mean attainment {mean:.4f}")
     out["mean_attainment_by_reuse"] = means
     for lo, hi in zip(means[:-1], means[1:]):
-        assert hi >= lo - 1e-9, \
+        assert hi >= lo - 1e-9,\
             ("attainment must not degrade as prefix reuse grows "
              "(nested traces)", means)
     print(f"[prefix] monotone gain: {[f'{m:.4f}' for m in means]}")
@@ -145,15 +145,15 @@ def run(quick: bool = False, max_rate: float = 12.0, horizon: float = 4.0,
     base_hi = _serve(names, rates, wl_hi, pool_blocks, cache=False)
     rep_hi = reps[hi]
     out["runs"][f"reuse_{hi}_off"] = base_hi.to_json()
-    assert rep_hi.aggregate.ttft.p50 < base_hi.aggregate.ttft.p50, \
+    assert rep_hi.aggregate.ttft.p50 < base_hi.aggregate.ttft.p50,\
         ("prefix caching must strictly improve aggregate TTFT p50 at "
          f"reuse {hi}", rep_hi.aggregate.ttft.p50,
          base_hi.aggregate.ttft.p50)
     att_on, att_off = _attainment(rep_hi), _attainment(base_hi)
-    assert any(att_on[s] > att_off[s] for s in SLO_SCALES), \
+    assert any(att_on[s] > att_off[s] for s in SLO_SCALES),\
         ("prefix caching must strictly improve SLO attainment at ≥ 1 "
          "scale", att_on, att_off)
-    assert all(att_on[s] >= att_off[s] - 1e-9 for s in SLO_SCALES), \
+    assert all(att_on[s] >= att_off[s] - 1e-9 for s in SLO_SCALES),\
         ("prefix caching must not trade one scale against another",
          att_on, att_off)
     print(f"[prefix] strict win at reuse {hi}: TTFT p50 "
@@ -165,7 +165,7 @@ def run(quick: bool = False, max_rate: float = 12.0, horizon: float = 4.0,
     measured = hits / lookups if lookups else 0.0
     out["hit_rate"] = {"measured": measured, "analytic_ceiling": bound,
                        "floor_factor": HIT_FLOOR_FACTOR}
-    assert measured >= HIT_FLOOR_FACTOR * bound, \
+    assert measured >= HIT_FLOOR_FACTOR * bound,\
         ("measured hit rate fell below the floor", measured, bound)
     print(f"[prefix] hit rate {measured:.2%} ≥ "
           f"{HIT_FLOOR_FACTOR} × ceiling {bound:.2%}")

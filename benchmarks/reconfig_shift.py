@@ -132,11 +132,11 @@ def run(quick: bool = False, horizon: float = 6.0) -> dict:
     # ---- CI gates ----------------------------------------------------
     s_att = static_rep.aggregate.attainment
     r_att = recfg_rep.aggregate.attainment
-    assert static_rep.aggregate.finished == len(wl.requests), \
+    assert static_rep.aggregate.finished == len(wl.requests),\
         "static run dropped requests"
-    assert recfg_rep.aggregate.finished == len(wl.requests), \
+    assert recfg_rep.aggregate.finished == len(wl.requests),\
         "reconfig run dropped requests"
-    assert rc.events >= 1 and rc.moves >= 1, \
+    assert rc.events >= 1 and rc.moves >= 1,\
         "the regime shift must trigger at least one migration"
     better = [s for s in SLO_SCALES if r_att[s] > s_att[s]]
     out["reconfig_strictly_better_scales"] = better

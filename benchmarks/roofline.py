@@ -17,7 +17,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro import configs
 from repro.config import SHAPES, PEAK_FLOPS_BF16, HBM_BW, ICI_BW

@@ -134,7 +134,7 @@ def run(quick: bool = False, max_rate: float = 60.0,
     att_t = reports["temporal"].aggregate.attainment
     att_s = reports["spatial_temporal"].aggregate.attainment
     wins = {s: (att_s[s], att_t[s]) for s in SLO_SCALES}
-    out["spatial_strictly_wins_all_scales"] = \
+    out["spatial_strictly_wins_all_scales"] =\
         all(att_s[s] > att_t[s] for s in SLO_SCALES)
     assert out["spatial_strictly_wins_all_scales"], (
         "planned spatial-temporal shares must strictly beat pure "
@@ -144,8 +144,8 @@ def run(quick: bool = False, max_rate: float = 60.0,
     # finish time of the same request set — lower = faster)
     out["horizon_temporal"] = reports["temporal"].horizon
     out["horizon_spatial"] = reports["spatial_temporal"].horizon
-    assert reports["spatial_temporal"].horizon \
-        <= reports["temporal"].horizon * 1.05, \
+    assert reports["spatial_temporal"].horizon\
+        <= reports["temporal"].horizon * 1.05,\
         "share enforcement must not slow the drain materially"
     print(f"[spatial_mux] spatial-temporal strictly wins at every scale; "
           f"drain {out['horizon_spatial']:.2f}s vs temporal "

@@ -14,11 +14,10 @@ arrival rate, place on the mesh with most free memory.
 """
 from __future__ import annotations
 
-import itertools
 import json
 import math
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.config import ModelConfig
 from repro.core import costmodel as cm
@@ -302,7 +301,7 @@ def place_onto_meshes(models: Sequence[Tuple[ModelConfig, float]],
             delta = after - (before if math.isfinite(before) else 0.0)
             if delta > best_delta:
                 best_mesh, best_delta, best_spec = mesh, delta, spec
-        assert best_mesh is not None, \
+        assert best_mesh is not None,\
             f"no mesh can host {cfg.name} at rate {rate}"
         best_mesh.specs.append(best_spec)
     tpt = sum(max(m.throughput(hw), 0.0) for m in meshes)
@@ -371,7 +370,7 @@ def place_spatial(models: Sequence[Tuple[ModelConfig, float]],
         extra[cfg.name] = int(spare * share)
     # distribute leftovers to the highest-rate models
     leftover = spare - sum(extra.values())
-    for cfg, rate in sorted(models, key=lambda mr: mr[1], reverse=True):
+    for cfg, _rate in sorted(models, key=lambda mr: mr[1], reverse=True):
         if leftover <= 0:
             break
         extra[cfg.name] += 1

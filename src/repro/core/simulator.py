@@ -82,7 +82,7 @@ class LLMState:
         c = self.spec.cfg
         if not c.ssm:
             return 0.0
-        return c.n_ssm_layers * c.n_ssm_heads * c.ssm.head_dim \
+        return c.n_ssm_layers * c.n_ssm_heads * c.ssm.head_dim\
             * c.ssm.d_state * 4.0
 
 
@@ -132,7 +132,7 @@ class UnitSim:
         self._pending_idx = 0
 
     def _admit_arrivals(self) -> None:
-        while self._pending_idx < len(self._pending) and \
+        while self._pending_idx < len(self._pending) and\
                 self._pending[self._pending_idx].spec.arrival <= self.clock:
             r = self._pending[self._pending_idx]
             self.llms[r.spec.model].waiting.append(r)
@@ -291,7 +291,7 @@ class UnitSim:
         # concurrent decode jobs (decode-decode colocation)
         t_dec = 0.0
         deced = []
-        for name, st in self.llms.items():
+        for st in self.llms.values():
             t = self._do_decode(st, st.spec.sm_frac)
             if t > 0:
                 deced.append(st)
@@ -313,7 +313,6 @@ class UnitSim:
         twin: the ``fcfs`` branch of ``MuxScheduler.tick`` (oldest
         waiting request picks the LLM, prefill+decode batch-wise to
         completion, no quotas)."""
-        n = len(self._names)
         t_total = 0.0
         # FCFS across LLMs: oldest waiting request picks the prefill
         oldest, oname = math.inf, None
@@ -325,7 +324,7 @@ class UnitSim:
             batch = self._try_prefill_batch(st)
             t_total += self._do_prefill(st, batch, 1.0)
         deced = []
-        for name, st in self.llms.items():
+        for st in self.llms.values():
             t = self._do_decode(st, 1.0)
             if t > 0:
                 t_total += t
@@ -458,7 +457,7 @@ def simulate(placement: Placement, workload: Workload, mode: str,
 
     att: Dict[float, float] = {}
     lats, ttfts, tpots = [], [], []
-    for r, spec in done:
+    for r, _spec in done:
         lats.append(r.latency)
         ttfts.append(r.prefill_end - r.spec.arrival)
         tpots.append((r.finish - r.prefill_end)

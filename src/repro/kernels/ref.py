@@ -5,9 +5,9 @@ tests pin the kernels to exactly the semantics the engine/dry-run use.
 """
 from __future__ import annotations
 
-from repro.models.layers import blocked_causal_attention, causal_attention
+from repro.models.layers import causal_attention
 from repro.models.mamba2 import ssd_chunked
-from repro.serving.cache_ops import paged_decode_attention as _paged_ref
+from repro.paging import paged_decode_attention as _paged_ref
 
 
 def flash_prefill_ref(q, k, v, *, window=None):

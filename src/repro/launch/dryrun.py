@@ -81,7 +81,7 @@ def collective_stats(hlo_text: str) -> dict:
         if s.startswith("%") or " = " in s:
             for kind in kinds:
                 # match op invocation, not metadata mentions
-                if re.search(rf"\)?\s{kind}(-start)?\(", s) or \
+                if re.search(rf"\)?\s{kind}(-start)?\(", s) or\
                         re.search(rf"= \S+ {kind}(-start)?\(", s):
                     r = _result_bytes(s)
                     n = _group_size(s)
@@ -141,7 +141,7 @@ def run_one(arch: str, shape: str, multi_pod: bool, out_dir: str,
         print(f"[dryrun] {arch} × {shape} × {mesh_name}: SKIP ({low.skip})")
         return rec
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     from jax.sharding import NamedSharding, PartitionSpec
     in_shard = jax.tree.map(
         lambda s: NamedSharding(mesh, s), low.in_specs,
@@ -150,10 +150,10 @@ def run_one(arch: str, shape: str, multi_pod: bool, out_dir: str,
         jitted = jax.jit(low.step_fn, in_shardings=in_shard,
                          donate_argnums=low.donate)
         lowered = jitted.lower(*low.args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

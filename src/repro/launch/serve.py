@@ -162,6 +162,12 @@ def main() -> int:
                          "while serving: GET /metrics (Prometheus text), "
                          "/metrics.json, /events (SSE); 0 picks an "
                          "ephemeral port")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="arm the runtime invariant sanitizer "
+                         "(serving/sanitize.py): re-validate pool, "
+                         "grant-algebra and request-disposition laws "
+                         "after every tick and fail fast on the first "
+                         "violation (also: MUXSERVE_SANITIZE=1)")
     ap.add_argument("--reconfig", action="store_true",
                     help="live reconfiguration: watch arrival-rate "
                          "drift, re-solve the placement online and "
@@ -335,7 +341,7 @@ def main() -> int:
         if not args.deterministic:
             print("[serve] note: fault times fire against the wall "
                   "clock; use --deterministic for reproducible chaos")
-        if any(e.kind == "migration_abort" for e in fault_plan.events) \
+        if any(e.kind == "migration_abort" for e in fault_plan.events)\
                 and not args.reconfig:
             print("[serve] note: migration_abort faults are inert "
                   "without --reconfig")
@@ -432,7 +438,8 @@ def main() -> int:
                              slo_scales=slo_scales, cost=cost,
                              reconfig=ctrl, faults=fault_plan,
                              watchdog_ticks=args.watchdog_ticks,
-                             shed_scale=args.shed_scale)
+                             shed_scale=args.shed_scale,
+                             sanitize=args.sanitize)
         report, outs = serve_and_collect(fe)
         streamed = sum(len(o) for o in outs.values() if isinstance(o, list))
         errors = sum(1 for o in outs.values() if isinstance(o, Exception))
@@ -447,7 +454,8 @@ def main() -> int:
                                 reconfig=ctrl, faults=fault_plan,
                                 watchdog_ticks=args.watchdog_ticks,
                                 shed_scale=args.shed_scale,
-                                metrics=metrics)
+                                metrics=metrics,
+                                sanitize=args.sanitize)
 
     # ---- report ------------------------------------------------------
     agg = report.aggregate
@@ -467,7 +475,7 @@ def main() -> int:
     if report.reconfig is not None:
         for ev in report.reconfig.log:
             moves = ", ".join(f"{n}: mesh{src}→mesh{dst}"
-                              for n, src, dst in ev["moves"]) \
+                              for n, src, dst in ev["moves"])\
                 or "quotas/shares only"
             print(f"[serve] reconfig @{ev['t']:.2f}s "
                   f"(drift {ev['drift']:.1f}×): {moves}; "

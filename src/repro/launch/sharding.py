@@ -17,7 +17,7 @@ Optimizer state (AdamW m/v) shards exactly like its parameter.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

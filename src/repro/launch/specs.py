@@ -17,17 +17,16 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.config import ModelConfig, SHAPES, ShapeConfig
+from repro.config import ModelConfig, SHAPES
 from repro.launch import sharding as shd
 from repro.launch import steps
 from repro.models.transformer import init_params

@@ -22,8 +22,7 @@ Cache layouts:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -37,7 +37,7 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = configs.get(args.arch) if args.full \
+    cfg = configs.get(args.arch) if args.full\
         else configs.get_reduced(args.arch)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
                       total_steps=args.steps)
@@ -68,7 +68,7 @@ def main() -> int:
             a.append(jnp.asarray(prefix))
         params, state, m = step_fn(*a)
         if (i + 1) % args.log_every == 0 or i == start:
-            tps = args.batch * args.seq * (i + 1 - start) \
+            tps = args.batch * args.seq * (i + 1 - start)\
                 / (time.perf_counter() - t0)
             print(f"[train] step {i + 1:5d}  loss={float(m['loss']):.4f}  "
                   f"lr={float(m['lr']):.2e}  "

@@ -8,7 +8,6 @@ are *stacked* on a leading layer axis so the model forward is a single
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Dict, Optional
 
 import jax

@@ -1,7 +1,6 @@
 """Architecture registry: arch-id → (config, init, forward)."""
 from __future__ import annotations
 
-from typing import Callable, Dict
 
 import jax.numpy as jnp
 

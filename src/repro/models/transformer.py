@@ -14,8 +14,6 @@ consumed as prefix tokens (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -26,7 +24,7 @@ from repro.models import layers as Lyr
 from repro.models import mamba2 as M2
 from repro.models import moe as MoE
 from repro.models.layers import (attn_qkv, blocked_causal_attention,
-                                 causal_attention, init_attn, init_embed,
+                                 init_attn, init_embed,
                                  init_mlp, lm_logits, mlp, rms_norm,
                                  shard_activation)
 

@@ -1,4 +1,4 @@
-"""Shared paged-KV index arithmetic (layer-neutral).
+"""Shared paged-KV index arithmetic and decode oracles (layer-neutral).
 
 Physical head-block id for (token-block base b, layer l, kv head h) of
 a model with KV kv-heads: ``b + l*KV + h`` (groups are contiguous —
@@ -6,9 +6,20 @@ see serving/kvcache.py).  Both the XLA oracle (serving/cache_ops) and
 the Pallas kernels (kernels/paged_attention) resolve tables through
 this one function so the two layers can never disagree on the pool
 layout.
+
+The paged *decode attention* oracles live here too: they are pure
+functions of (query, arena, resolved blocks) with no serving-state
+dependency, and both the serving engine (via serving/cache_ops) and
+the kernel test oracles (kernels/ref.py) consume them.  Hosting them
+in this shared leaf keeps the layer DAG acyclic — kernels must not
+import serving (ARCHITECTURE.md; enforced by ``tools/muxlint``
+``layering``).
 """
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
 
@@ -29,3 +40,49 @@ def resolve_physical_blocks(table, layer, n_kv):
     heads = jnp.arange(n_kv, dtype=jnp.int32)[:, None]       # [n_kv, 1]
     phys = jnp.maximum(table, 0)[..., None, :] + layer * n_kv + heads
     return jnp.where(table[..., None, :] >= 0, phys, 0).astype(jnp.int32)
+
+
+def fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens):
+    """Multi-sequence decode attention over pre-resolved physical blocks.
+
+    The fused multi-LLM tick (DESIGN.md §2) flattens the decode rows of
+    all colocated same-architecture engines into one batch; each row's
+    ``phys`` entries already encode (model, layer) → physical id, so
+    the attention sweep itself is model-agnostic.
+
+    q: [B, H, hd] — one query token per row (post-RoPE)
+    pool_k/v: [N, BT, hd]
+    phys: [B, n_kv, max_blocks] int32 physical head-block ids
+    seq_lens: [B] (length INCLUDING the current token)
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    BT = pool_k.shape[1]
+    n_kv, max_blocks = phys.shape[1], phys.shape[2]
+    group = H // n_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    k = pool_k[phys].reshape(B, n_kv, max_blocks * BT, hd)
+    v = pool_v[phys].reshape(B, n_kv, max_blocks * BT, hd)
+
+    qh = q.reshape(B, n_kv, group, hd)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qh, k).astype(jnp.float32) * scale
+    t_pos = jnp.arange(max_blocks * BT)[None, None, None, :]
+    mask = t_pos < seq_lens[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v)
+    return out.reshape(B, H, hd)
+
+
+def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
+    """Single-token decode attention against the paged pool (oracle).
+
+    q: [B, H, hd] — one query token per sequence (post-RoPE)
+    pool_k/v: [N, BT, hd]
+    table: [B, max_blocks]; seq_lens: [B] (length INCLUDING current token,
+    whose KV must already be written).
+    Returns [B, H, hd].
+    """
+    phys = resolve_physical_blocks(table, layer, n_kv)
+    return fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens)

@@ -14,7 +14,9 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.paging import resolve_physical_blocks
+from repro.paging import (fused_paged_decode_attention,
+                          paged_decode_attention,
+                          resolve_physical_blocks)
 
 __all__ = ["write_tokens", "resolve_physical_blocks", "copy_block_groups",
            "fused_paged_decode_attention", "paged_decode_attention",
@@ -77,52 +79,6 @@ def write_tokens(pool_k, pool_v, k_new, v_new, table, start_pos, layer, n_kv):
     pool_v = pool_v.at[phys.reshape(-1), off_b.reshape(-1)].set(
         v_new.reshape(-1, hd), mode="drop")
     return pool_k, pool_v
-
-
-def fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens):
-    """Multi-sequence decode attention over pre-resolved physical blocks.
-
-    The fused multi-LLM tick (DESIGN.md §2) flattens the decode rows of
-    all colocated same-architecture engines into one batch; each row's
-    ``phys`` entries already encode (model, layer) → physical id, so
-    the attention sweep itself is model-agnostic.
-
-    q: [B, H, hd] — one query token per row (post-RoPE)
-    pool_k/v: [N, BT, hd]
-    phys: [B, n_kv, max_blocks] int32 physical head-block ids
-    seq_lens: [B] (length INCLUDING the current token)
-    Returns [B, H, hd].
-    """
-    B, H, hd = q.shape
-    BT = pool_k.shape[1]
-    n_kv, max_blocks = phys.shape[1], phys.shape[2]
-    group = H // n_kv
-    scale = 1.0 / math.sqrt(hd)
-
-    k = pool_k[phys].reshape(B, n_kv, max_blocks * BT, hd)
-    v = pool_v[phys].reshape(B, n_kv, max_blocks * BT, hd)
-
-    qh = q.reshape(B, n_kv, group, hd)
-    scores = jnp.einsum("bkgd,bktd->bkgt", qh, k).astype(jnp.float32) * scale
-    t_pos = jnp.arange(max_blocks * BT)[None, None, None, :]
-    mask = t_pos < seq_lens[:, None, None, None]
-    scores = jnp.where(mask, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgt,bktd->bkgd", probs, v)
-    return out.reshape(B, H, hd)
-
-
-def paged_decode_attention(q, pool_k, pool_v, table, seq_lens, layer, n_kv):
-    """Single-token decode attention against the paged pool (oracle).
-
-    q: [B, H, hd] — one query token per sequence (post-RoPE)
-    pool_k/v: [N, BT, hd]
-    table: [B, max_blocks]; seq_lens: [B] (length INCLUDING current token,
-    whose KV must already be written).
-    Returns [B, H, hd].
-    """
-    phys = resolve_physical_blocks(table, layer, n_kv)
-    return fused_paged_decode_attention(q, pool_k, pool_v, phys, seq_lens)
 
 
 def fused_paged_chunk_attention(q, pool_k, pool_v, phys, q_offset):

@@ -50,11 +50,11 @@ from repro.core.placement import Placement
 from repro.core.workload import Workload
 from repro.models.transformer import init_params
 from repro.serving.engine import Engine, Request
-from repro.serving.faults import (FaultInjector, FaultPlan,
-                                  RecoveryCostModel)
+from repro.serving.faults import FaultInjector, RecoveryCostModel
 from repro.serving.kvcache import UnifiedKVPool
 from repro.serving.mux import MuxScheduler
 from repro.serving.reconfig import ReconfigController, WorkloadMonitor
+from repro.serving.sanitize import SessionSanitizer, sanitize_enabled
 
 # same default ladder as core/simulator.simulate — keep in sync, the
 # reports are meant to be compared side by side
@@ -264,20 +264,20 @@ def calibrate_slo_refs(engines: Dict[str, Engine], probe_prompt: int = 16,
     rng = np.random.default_rng(seed)
     refs: Dict[str, SLORef] = {}
     for name, eng in engines.items():
-        for attempt in range(2):                  # warm-up, then measure
+        for _attempt in range(2):                 # warm-up, then measure
             req = Request(-1, name,
                           list(rng.integers(1, eng.cfg.vocab_size,
                                             probe_prompt)),
                           probe_decode + 1)
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()          # muxlint: ok[clock] solo-speed probe measures real wall time by design
             eng.prefill([req])
             while eng.has_prefill_work():         # chunked engines
                 eng.prefill([])
-            t_prefill = time.perf_counter() - t0
-            t0 = time.perf_counter()
+            t_prefill = time.perf_counter() - t0  # muxlint: ok[clock] solo-speed probe measures real wall time by design
+            t0 = time.perf_counter()          # muxlint: ok[clock] solo-speed probe measures real wall time by design
             while not req.done and eng.has_decode_work():
                 eng.decode()
-            t_decode = time.perf_counter() - t0
+            t_decode = time.perf_counter() - t0   # muxlint: ok[clock] solo-speed probe measures real wall time by design
             eng.finished.clear()
         refs[name] = SLORef(
             prefill_per_token=t_prefill / probe_prompt,
@@ -371,7 +371,7 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
     whole-prompt prefill path cannot resume mid-prompt.
     """
     assert specs, "a unit needs at least one (name, arch, rate) spec"
-    assert not (prefix_cache and not chunk_tokens), \
+    assert not (prefix_cache and not chunk_tokens),\
         "prefix_cache requires chunked prefill (chunk_tokens > 0)"
     pool = UnifiedKVPool(pool_blocks, 64, dtype=jnp.float32,
                          prefix_cache=prefix_cache)
@@ -389,7 +389,7 @@ def build_unit_from_specs(specs: Sequence[Tuple[str, str, float]],
             quota = pool_blocks
         else:
             # all-zero rates degrade to an equal split
-            share = (max(rate, 0.0) / rate_sum) if rate_sum \
+            share = (max(rate, 0.0) / rate_sum) if rate_sum\
                 else 1 / len(specs)
             quota = max(int(pool_blocks * share), min_quota)
         view = pool.register_model(cfg, quota)
@@ -622,7 +622,7 @@ class ServeReport:
         lines.append(f"aggregate: shed={a.shed} retried={a.retried} "
                      f"recovered={a.recovered}"
                      + (f" cancelled={a.cancelled}" if a.cancelled else "")
-                     + (f" (shed by: "
+                     + (" (shed by: "
                         + ", ".join(f"{k}={v}" for k, v
                                     in sorted(a.shed_reasons.items()))
                         + ")" if a.shed_reasons else ""))
@@ -710,7 +710,7 @@ def _roll_up(name: str, reqs: List[Request], horizon: float,
     shed_reasons: Dict[str, int] = {}
     for r in reqs:
         if r.shed:
-            shed_reasons[r.shed_reason] = \
+            shed_reasons[r.shed_reason] =\
                 shed_reasons.get(r.shed_reason, 0) + 1
     retried = [r for r in reqs if r.requeues > 0]
     return LLMReport(name=name, submitted=len(reqs), finished=len(fin),
@@ -846,13 +846,14 @@ class ServeSession:
                  ref_cost: Optional[TickCostModel] = None,
                  metrics=None,
                  route_fn: Optional[Callable[[Request], str]] = None,
-                 on_topology_change: Optional[Callable[[], None]] = None):
+                 on_topology_change: Optional[Callable[[], None]] = None,
+                 sanitize: bool = False):
         self.units = list(units)
         self.owner: Dict[str, MuxScheduler] = {}
         self.engines: Dict[str, Engine] = {}
         for u in self.units:
             for name, eng in u.engines.items():
-                assert name not in self.owner, \
+                assert name not in self.owner,\
                     f"duplicate model {name} across units"
                 self.owner[name] = u
                 self.engines[name] = eng
@@ -929,7 +930,7 @@ class ServeSession:
         if self._deadline_models:
             for r in requests:
                 if r.model in self._deadline_models:
-                    r.deadline = r.arrival + self._deadline_slack * \
+                    r.deadline = r.arrival + self._deadline_slack *\
                         self.ref_fn(r.model, len(r.prompt), 0)
 
         # drift monitor: the controller's when reconfiguring, a
@@ -955,7 +956,15 @@ class ServeSession:
         # observation sees each disposition exactly once
         self._fin_idx = [0] * len(self.units)
         self._shed_idx = [0] * len(self.units)
-        self._wall0 = time.perf_counter()
+        self._wall0 = time.perf_counter()  # muxlint: ok[clock] report bookkeeping: real elapsed wall seconds, never scheduling
+
+        # runtime invariant sanitizer (serving/sanitize.py, DESIGN.md
+        # §15): a pure reader re-validating pool/scheduler/disposition
+        # laws after every busy tick.  Armed by the flag or by
+        # MUXSERVE_SANITIZE=1 in the environment.
+        self.sanitizer = None
+        if sanitize or sanitize_enabled():
+            self.sanitizer = SessionSanitizer(self)
 
     # -- one loop iteration ---------------------------------------------
     def step(self) -> Tuple[str, float]:
@@ -972,6 +981,8 @@ class ServeSession:
         """
         if self._done or (self.idx >= len(self.requests)
                           and not any(u.pending() for u in self.units)):
+            if not self._done and self.sanitizer is not None:
+                self.sanitizer.check("drain")
             self._done = True
             return ("done", 0.0)
         now = self.clock()
@@ -1031,7 +1042,7 @@ class ServeSession:
                            for u in self.units)
             if progress == self._last_progress:
                 self._stall_run += 1
-                if self.watchdog_ticks \
+                if self.watchdog_ticks\
                         and self._stall_run >= self.watchdog_ticks:
                     shed_n = sum(u.shed_all("watchdog")
                                  for u in self.units)
@@ -1049,6 +1060,8 @@ class ServeSession:
             self._last_progress = progress
             if self.metrics is not None:
                 self._observe_tick(busy)
+            if self.sanitizer is not None:
+                self.sanitizer.check(f"tick {self.ticks}")
             if self.ticks >= self.max_ticks:
                 self._done = True
                 return ("tick", 0.0)
@@ -1089,7 +1102,7 @@ class ServeSession:
                 r.model = target
             if (r.model in self._deadline_models
                     and r.deadline == float("inf")):
-                r.deadline = r.arrival + self._deadline_slack * \
+                r.deadline = r.arrival + self._deadline_slack *\
                     self.ref_fn(r.model, len(r.prompt), 0)
         self.owner[r.model].submit(r)
         self._submitted.add(id(r))
@@ -1189,7 +1202,7 @@ class ServeSession:
     def report(self) -> ServeReport:
         if self._report is not None:
             return self._report
-        wall_s = time.perf_counter() - self._wall0
+        wall_s = time.perf_counter() - self._wall0  # muxlint: ok[clock] report bookkeeping: real elapsed wall seconds, never scheduling
         if self.monitor is not None:
             self.monitor.advance(self.clock())  # close trailing windows
 
@@ -1262,7 +1275,8 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
                    watchdog_ticks: int = 1000,
                    shed_scale: Optional[float] = None,
                    ref_cost: Optional[TickCostModel] = None,
-                   metrics=None
+                   metrics=None,
+                   sanitize: bool = False
                    ) -> ServeReport:
     """Drive real units through an arrival-ordered request list and
     roll the ``Request`` timelines up into a ``ServeReport`` — the
@@ -1330,7 +1344,7 @@ def serve_requests(units: Sequence[MuxScheduler], requests: List[Request],
         warm=warm, max_ticks=max_ticks, planned_rates=planned_rates,
         reconfig=reconfig, faults=faults, recovery_cost=recovery_cost,
         watchdog_ticks=watchdog_ticks, shed_scale=shed_scale,
-        ref_cost=ref_cost, metrics=metrics)
+        ref_cost=ref_cost, metrics=metrics, sanitize=sanitize)
     while True:
         status, wait = session.step()
         if status == "done":
@@ -1352,7 +1366,8 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                    watchdog_ticks: int = 1000,
                    shed_scale: Optional[float] = None,
                    ref_cost: Optional[TickCostModel] = None,
-                   metrics=None
+                   metrics=None,
+                   sanitize: bool = False
                    ) -> ServeReport:
     """``serve_requests`` over a ``core/workload.py`` trace (the shared
     simulator/runtime arrival process).  The trace's per-LLM rates
@@ -1368,4 +1383,4 @@ def serve_workload(units: Sequence[MuxScheduler], wl: Workload,
                           faults=faults, recovery_cost=recovery_cost,
                           watchdog_ticks=watchdog_ticks,
                           shed_scale=shed_scale, ref_cost=ref_cost,
-                          metrics=metrics)
+                          metrics=metrics, sanitize=sanitize)

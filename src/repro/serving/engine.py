@@ -49,7 +49,7 @@ from repro.models import moe as MoE
 from repro.models.layers import (attn_qkv, causal_attention, lm_logits,
                                  mlp, rms_norm)
 from repro.serving import cache_ops
-from repro.serving.kvcache import ModelCacheView, UnifiedKVPool
+from repro.serving.kvcache import ModelCacheView
 
 
 @dataclass

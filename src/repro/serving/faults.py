@@ -126,7 +126,8 @@ class FaultPlan:
             try:
                 at = float(t_str)
             except ValueError:
-                raise ValueError(f"fault {tok!r}: bad time {t_str!r}")
+                raise ValueError(
+                    f"fault {tok!r}: bad time {t_str!r}") from None
             parts = head.split(":")
             kind = _PARSE_KINDS.get(parts[0])
             if kind is None:
@@ -151,7 +152,8 @@ class FaultPlan:
                 raise ValueError(
                     f"fault {tok!r}: expected "
                     f"crash:<name>@<t>, block_loss:<name>:<blocks>@<t>, "
-                    f"transient:<name>:<ticks>@<t> or migration_abort@<t>")
+                    f"transient:<name>:<ticks>@<t> or "
+                    f"migration_abort@<t>") from None
         return cls(events)
 
     @classmethod

@@ -90,6 +90,11 @@ class BlockAllocator:
         """Copy of the live refcount map (tests/debugging)."""
         return dict(self._refs)
 
+    def free_ranges(self) -> List[Tuple[int, int]]:
+        """Copy of the sorted free list (sanitizer/tests) — half-open
+        ``(start, end)`` ranges."""
+        return list(self._free)
+
     def free(self, start: int, n: int) -> None:
         """Drop one holder per block; blocks reaching refcount 0 are
         coalesced back into the free list.  Freeing a dead block
@@ -716,8 +721,9 @@ class UnifiedKVPool:
         return out
 
     def register_model(self, cfg: ModelConfig, quota: int) -> ModelCacheView:
-        assert cfg.attn_free or cfg.hd == self.head_dim or True, \
-            "pools are grouped by head_dim"
+        assert cfg.attn_free or cfg.hd == self.head_dim, \
+            (f"pools are grouped by head_dim: model {cfg.name!r} has "
+             f"head_dim {cfg.hd}, pool has {self.head_dim}")
         v = ModelCacheView(cfg, self, quota, prefix_cache=self.prefix_cache)
         self.views[cfg.name] = v
         self.used_by[cfg.name] = 0

@@ -326,6 +326,10 @@ class MuxScheduler:
         # so repeated dissolve/rebuild cycles (live reconfiguration)
         # cannot inflate the arena past its reclaimed-weight backing.
         self._grant_debt = 0
+        # optional runtime invariant checker (serving.sanitize);
+        # SchedulerSanitizer installs itself here so the block-loss
+        # fault path can report arena shrinks that change the base
+        self.sanitizer = None
         if self.fused:
             self._build_fused_groups()
 
@@ -631,6 +635,8 @@ class MuxScheduler:
                 self.queues[name].appendleft(r)
             requeued += len(evicted)
         removed = self.pool.shrink(n)
+        if self.sanitizer is not None:
+            self.sanitizer.note_blocks_lost(removed)
         rec = {"kind": "block_loss", "t": self.clock(), "target": None,
                "requeued": requeued, "shed": shed, "blocks": removed}
         self.fault_events.append(rec)

@@ -444,7 +444,7 @@ class ReconfigController:
                  sustain: int = 2, ewma_alpha: float = 0.5,
                  cooldown: Optional[float] = None,
                  hw: Hardware = A100,
-                 migration_cost: MigrationCostModel = MigrationCostModel(),
+                 migration_cost: Optional[MigrationCostModel] = None,
                  tick_base: float = 4e-3):
         self.placement = placement
         self.units: Dict[int, MuxScheduler] = {}
@@ -460,7 +460,8 @@ class ReconfigController:
                                        threshold=drift_threshold,
                                        sustain=sustain)
         self.executor = MigrationExecutor(self.units)
-        self.migration_cost = migration_cost
+        self.migration_cost = (migration_cost if migration_cost
+                               is not None else MigrationCostModel())
         self.cooldown = (2 * interval) if cooldown is None else cooldown
         self.hw = hw
         self.tick_base = tick_base

@@ -80,8 +80,8 @@ def restore(ckpt_dir: str, like: Pytree, step: Optional[int] = None
         entry = by_path.get(key)
         assert entry is not None, f"checkpoint missing leaf {key}"
         arr = np.load(os.path.join(src, entry["file"]))
-        assert list(arr.shape) == list(leaf.shape), \
+        assert list(arr.shape) == list(leaf.shape),\
             f"{key}: shape {arr.shape} != {leaf.shape}"
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
-    return jax.tree.unflatten(treedef, leaves), manifest["step"], \
+    return jax.tree.unflatten(treedef, leaves), manifest["step"],\
         manifest["extra"]

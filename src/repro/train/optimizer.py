@@ -7,9 +7,8 @@ the train-shape dry-run memory analysis meaningful.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

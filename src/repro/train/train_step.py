@@ -6,8 +6,7 @@ definition, two scales.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

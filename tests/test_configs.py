@@ -1,11 +1,10 @@
 """Assigned-architecture configs: exact fields, derived quantities,
 tensor-parallel geometry."""
-import math
 
 import pytest
 
 from repro import configs
-from repro.config import SHAPES, tp_geometry
+from repro.config import SHAPES
 from repro.launch.sharding import physical_config
 
 from conftest import ALL_ARCHS

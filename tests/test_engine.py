@@ -67,8 +67,7 @@ def test_engine_slot_reuse():
     pending = list(reqs)
     for _ in range(50):
         if pending:
-            n = eng.prefill(pending[:len(eng.free_slots())])
-            k = len([r for r in pending[:2] if r.output])
+            eng.prefill(pending[:len(eng.free_slots())])
         eng.decode()
         pending = [r for r in pending if not r.output]
         served = sum(1 for r in reqs if r.done)

@@ -140,6 +140,26 @@ def test_view_quota_enforced():
     assert pool.allocator.used == 0
 
 
+def test_register_model_rejects_mismatched_head_dim():
+    """Regression: the head-dim guard was a tautology (`... or True`)
+    until PR 10, silently admitting views whose pages could never fit
+    the arena rows.  A mismatched attention model must be rejected;
+    attention-free models carry no KV pages and register anywhere."""
+    from repro.config import replace
+    pool = _pool(hd=64)
+    cfg = configs.get_reduced("qwen2-7b")
+    bad = replace(cfg, name="bad-hd", head_dim=48)
+    with pytest.raises(AssertionError, match="head_dim"):
+        pool.register_model(bad, quota=256)
+    assert "bad-hd" not in pool.views
+    # matching head_dim and attention-free both still register
+    pool.register_model(cfg, quota=256)
+    ssm = configs.get_reduced("mamba2-2.7b")
+    assert ssm.attn_free
+    view = pool.register_model(ssm, quota=256)
+    assert view.group_size == 0
+
+
 def test_two_models_share_pool():
     """Two different reduced models allocate from one arena."""
     pool = _pool()
@@ -329,7 +349,8 @@ def test_pool_sharing_interleaving(ops):
     reclaimed while a holder remains (DESIGN.md §13)."""
     base = 512
     pool = UnifiedKVPool(base, 16)
-    cfg = configs.get_reduced("qwen2-7b")
+    from repro.config import replace
+    cfg = replace(configs.get_reduced("qwen2-7b"), head_dim=16)
     view = pool.register_model(cfg, quota=10**9)
     gs = view.group_size
     granted = debt = 0

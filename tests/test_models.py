@@ -8,7 +8,7 @@ import pytest
 
 from repro import configs
 from repro.models.layers import apply_rope, repeat_kv, rms_norm
-from repro.models.transformer import forward, init_params, loss_fn
+from repro.models.transformer import forward, init_params
 from repro.train.optimizer import AdamWConfig, init_state
 from repro.train.train_step import make_train_step
 

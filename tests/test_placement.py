@@ -1,8 +1,6 @@
 """Placement (Alg. 1 + Alg. 2) and throughput estimator (Eq. 3)."""
 import math
 
-import numpy as np
-import pytest
 
 from repro.core import costmodel as cm
 from repro.core.costmodel import A100, TPU_V5E

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.config import BLOCK_TOKENS
+from repro.config import BLOCK_TOKENS, replace
 from repro.serving.driver import LogicalClock, build_unit_from_specs
 from repro.serving.engine import Request
 from repro.serving.kvcache import UnifiedKVPool
@@ -142,8 +142,10 @@ def test_adoption_clamped_below_full_prompt():
 # copy-on-write at the view + cache_ops level
 # ---------------------------------------------------------------------------
 def _crafted_view():
+    # tiny head_dim keeps the crafted arena small; the cfg must match
+    # it now that register_model actually validates head_dim (PR 10)
     pool = UnifiedKVPool(256, 8, dtype=jnp.float32)
-    cfg = configs.get_reduced("qwen2-7b")
+    cfg = replace(configs.get_reduced("qwen2-7b"), head_dim=8)
     view = pool.register_model(cfg, quota=10**6)
     assert view.append_tokens(0, BLOCK_TOKENS)    # donor: one full block
     base = view.seqs[0].bases[0]
@@ -289,7 +291,7 @@ def test_index_evicted_under_allocation_pressure():
     admission (``available_blocks`` counts them; ``reclaim`` frees
     them)."""
     pool = UnifiedKVPool(8 * 4, 8, dtype=jnp.float32, prefix_cache=True)
-    cfg = configs.get_reduced("qwen2-7b")
+    cfg = replace(configs.get_reduced("qwen2-7b"), head_dim=8)
     view = pool.register_model(cfg, quota=10**6)
     gs = view.group_size                   # 4 → arena holds 8 groups
     rng = np.random.default_rng(3)

@@ -212,7 +212,7 @@ def test_migrate_view_copies_pages_and_frees_source():
     eng.rebind_view(view)
     assert blocks == sum(len(b) for b, _ in seqs_before.values()) * gs
     # per-sequence bookkeeping carried over; pages bit-identical
-    for sid, (bases, n_tokens) in seqs_before.items():
+    for sid, (_bases, n_tokens) in seqs_before.items():
         assert view.seqs[sid].n_tokens == n_tokens
         dst = np.concatenate([np.asarray(uB.pool.k[b:b + gs])
                               for b in view.seqs[sid].bases])

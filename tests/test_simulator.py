@@ -1,10 +1,9 @@
 """Discrete-event simulator: conservation, baselines ordering, SLO
 monotonicity — the substrate of the paper's end-to-end claims."""
-import numpy as np
 import pytest
 
 from repro.core.placement import place, place_spatial
-from repro.core.simulator import SimReport, UnitSim, simulate
+from repro.core.simulator import UnitSim, simulate
 from repro.core.workload import llama_config, synthesize
 from repro.core.estimator import LLMSpec
 

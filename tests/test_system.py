@@ -4,7 +4,6 @@ simulator-vs-estimator coherence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.core.placement import place, place_spatial

@@ -98,7 +98,7 @@ def test_loss_decreases(arch):
         params, state, m = step(*args)
         losses.append(float(m["loss"]))
     assert np.isfinite(losses).all()
-    assert np.mean(losses[-5:]) < losses[0] - 0.5, \
+    assert np.mean(losses[-5:]) < losses[0] - 0.5,\
         f"{arch}: {losses[0]:.3f} → {np.mean(losses[-5:]):.3f}"
 
 

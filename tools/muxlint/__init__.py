@@ -1,0 +1,28 @@
+"""muxlint — repo-specific static analysis for the MuxServe reproduction.
+
+Four AST passes enforce the invariants the test suite can only
+spot-check (DESIGN.md §15):
+
+* ``layering``     — the ARCHITECTURE.md layer DAG, from a declared
+                     allowed-import graph; violations name the edge.
+* ``clock``        — deterministic-replay modules (``serving/``,
+                     ``core/``) must not call wall clocks or build
+                     unseeded RNGs outside WallClock/probe sites.
+* ``jit-hazard``   — host syncs, traced-value branches and ``print``
+                     inside jitted step impls (the PR-2 zero-retrace
+                     guarantee).
+* ``dead-assert``  — tautological or side-effecting assert
+                     expressions (an assert that cannot fire, or that
+                     changes state when ``-O`` strips it).
+
+Run ``python -m tools.muxlint src`` (CI gates on exit 0).  Accepted
+exceptions live either inline (``# muxlint: ok[rule] reason``) or in
+the reviewed baseline file ``tools/muxlint/baseline.json`` — both
+require a justification, and a baseline entry that no longer matches
+any finding fails the run (stale suppressions rot).
+"""
+from tools.muxlint.core import (Finding, Source, all_passes, lint_paths,
+                                load_baseline, match_baseline)
+
+__all__ = ["Finding", "Source", "all_passes", "lint_paths",
+           "load_baseline", "match_baseline"]

@@ -1,0 +1,96 @@
+"""CLI: ``python -m tools.muxlint [paths...]``.
+
+Exit codes: 0 — clean (no unsuppressed findings, no stale baseline
+entries); 1 — findings; 2 — stale baseline entries or an invalid
+baseline file.  CI gates on 0 (``.github/workflows/ci.yml`` muxlint
+job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.muxlint.core import (all_passes, lint_paths, load_baseline,
+                                match_baseline)
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.muxlint",
+        description="repo-specific static analysis (layering, clock "
+                    "purity, jit hazards, dead asserts)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to analyze (default: src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="reviewed-exception file (JSON); "
+                         "--no-baseline disables")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file entirely")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated pass names to run "
+                         "(default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--root", default=".",
+                    help="repo root paths are relative to")
+    args = ap.parse_args(argv)
+
+    passes = all_passes()
+    if args.select:
+        want = set(args.select.split(","))
+        unknown = want - set(passes)
+        if unknown:
+            ap.error(f"unknown pass(es): {sorted(unknown)} "
+                     f"(have: {sorted(passes)})")
+        passes = {k: v for k, v in passes.items() if k in want}
+
+    findings, pragma_suppressed, errors = lint_paths(
+        args.paths or ["src"], root=args.root, passes=passes)
+
+    stale = []
+    baselined = 0
+    if not args.no_baseline and os.path.exists(args.baseline):
+        try:
+            entries = load_baseline(args.baseline)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            print(f"muxlint: invalid baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            return 2
+        n_before = len(findings)
+        findings, stale = match_baseline(findings, entries)
+        baselined = n_before - len(findings)
+
+    if args.json:
+        print(json.dumps({
+            "findings": [vars(f) for f in findings],
+            "stale_baseline": stale,
+            "suppressed_inline": len(pragma_suppressed),
+            "suppressed_baseline": baselined,
+            "parse_errors": errors,
+        }, indent=1))
+    else:
+        for f in findings:
+            print(f.render())
+        for e in errors:
+            print(f"muxlint: parse error: {e}", file=sys.stderr)
+        for s in stale:
+            print(f"muxlint: STALE baseline entry (matches nothing — "
+                  f"remove it): {s['rule']} {s['path']} "
+                  f"{s['line_text']!r}", file=sys.stderr)
+        total = len(findings)
+        print(f"muxlint: {total} finding{'s' if total != 1 else ''} "
+              f"({len(pragma_suppressed)} inline-suppressed, "
+              f"{baselined} baselined, {len(stale)} stale baseline "
+              f"entr{'ies' if len(stale) != 1 else 'y'})",
+              file=sys.stderr)
+    if stale:
+        return 2
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

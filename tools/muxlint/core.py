@@ -1,0 +1,184 @@
+"""muxlint infrastructure: findings, sources, suppressions, baseline.
+
+A *pass* is a callable ``(Source) -> Iterable[Finding]`` registered in
+``PASSES`` (each pass module self-registers on import).  The driver
+walks the target paths, parses each ``.py`` once, runs every pass, then
+filters findings through two suppression channels:
+
+* inline pragma — ``# muxlint: ok[rule] reason`` on the flagged line
+  (the reason is mandatory: a bare pragma does not suppress);
+* baseline file — JSON entries ``{rule, path, line_text, why}`` matched
+  on the *stripped source text* of the flagged line (robust to line
+  drift), each with a mandatory ``why``.
+
+Baseline entries that match no current finding are reported as *stale*
+and fail the run — accepted exceptions must not outlive the code they
+excused.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*muxlint:\s*ok\[([a-z0-9_,-]+)\]\s*(.*)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str            # pass id, e.g. "layering"
+    path: str            # repo-relative file path
+    line: int            # 1-based
+    message: str
+    line_text: str = ""  # stripped source of the flagged line
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class Source:
+    """One parsed file, shared by every pass."""
+    path: str                      # repo-relative, forward slashes
+    text: str
+    tree: ast.AST
+    lines: List[str] = field(default_factory=list)
+    # line -> set of rules a valid inline pragma suppresses ("*" = all)
+    pragmas: Dict[int, set] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str, text: str) -> "Source":
+        tree = ast.parse(text, filename=path)
+        lines = text.splitlines()
+        pragmas: Dict[int, set] = {}
+        for i, ln in enumerate(lines, 1):
+            m = PRAGMA_RE.search(ln)
+            if m and m.group(2).strip():
+                # pragma without a justification is ignored on purpose
+                pragmas[i] = set(r.strip() for r in m.group(1).split(","))
+        return cls(path=path, text=text, tree=tree, lines=lines,
+                   pragmas=pragmas)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 0))
+        return Finding(rule=rule, path=self.path, line=line,
+                       message=message, line_text=self.line_text(line))
+
+    def suppressed(self, f: Finding) -> bool:
+        rules = self.pragmas.get(f.line)
+        return bool(rules) and (f.rule in rules or "*" in rules)
+
+
+Pass = Callable[[Source], Iterable[Finding]]
+PASSES: Dict[str, Pass] = {}
+
+
+def register(name: str) -> Callable[[Pass], Pass]:
+    def deco(fn: Pass) -> Pass:
+        PASSES[name] = fn
+        return fn
+    return deco
+
+
+def all_passes() -> Dict[str, Pass]:
+    # import for side effect: each pass module registers itself
+    from tools.muxlint import (dead_asserts, jit_hazards,  # noqa: F401
+                               layering, purity)
+    return dict(PASSES)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+def load_baseline(path: str) -> List[dict]:
+    """Load and validate the reviewed-exception file.  Every entry
+    must carry rule, path, line_text and a non-empty ``why`` — an
+    unjustified exception is a config error, not a suppression."""
+    with open(path) as f:
+        data = json.load(f)
+    entries = data["suppressions"] if isinstance(data, dict) else data
+    for i, e in enumerate(entries):
+        for key in ("rule", "path", "line_text", "why"):
+            if not str(e.get(key, "")).strip():
+                raise ValueError(
+                    f"baseline entry {i} is missing a non-empty "
+                    f"{key!r}: {e!r}")
+    return entries
+
+
+def match_baseline(findings: List[Finding], entries: List[dict]
+                   ) -> Tuple[List[Finding], List[dict]]:
+    """Split ``findings`` against the baseline.  Returns
+    ``(unsuppressed, stale_entries)`` — an entry suppresses every
+    finding with the same (rule, path, stripped line text); entries
+    matching nothing are stale."""
+    used = [False] * len(entries)
+    out: List[Finding] = []
+    for f in findings:
+        hit = False
+        for i, e in enumerate(entries):
+            if (e["rule"] == f.rule and e["path"] == f.path
+                    and e["line_text"] == f.line_text):
+                used[i] = True
+                hit = True
+        if not hit:
+            out.append(f)
+    stale = [e for i, e in enumerate(entries) if not used[i]]
+    return out, stale
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def _walk_py(paths: Iterable[str], root: str) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full) and full.endswith(".py"):
+            files.append(full)
+        elif os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d != "__pycache__"
+                                     and not d.startswith("."))
+                files.extend(os.path.join(dirpath, fn)
+                             for fn in sorted(filenames)
+                             if fn.endswith(".py"))
+    return files
+
+
+def lint_paths(paths: Iterable[str], root: str = ".",
+               passes: Optional[Dict[str, Pass]] = None
+               ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Run every pass over every ``.py`` under ``paths``.
+
+    Returns ``(kept, pragma_suppressed, errors)`` — ``kept`` still
+    needs the baseline filter (``match_baseline``); ``errors`` are
+    files that failed to parse (reported, non-fatal: a syntax error is
+    the ruff E9 gate's job)."""
+    passes = passes if passes is not None else all_passes()
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    errors: List[str] = []
+    for full in _walk_py(paths, root):
+        rel = os.path.relpath(full, root).replace(os.sep, "/")
+        try:
+            with open(full, encoding="utf-8") as f:
+                src = Source.parse(rel, f.read())
+        except (SyntaxError, UnicodeDecodeError) as e:
+            errors.append(f"{rel}: {e}")
+            continue
+        for fn in passes.values():
+            for f in fn(src):
+                (suppressed if src.suppressed(f) else kept).append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept, suppressed, errors

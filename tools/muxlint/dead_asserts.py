@@ -1,0 +1,78 @@
+"""Dead-assert pass: an assert that cannot fire guards nothing.
+
+The motivating find: ``assert cfg.attn_free or cfg.hd == self.head_dim
+or True`` (kvcache.py pre-PR-10) — a tautology that silently disabled
+head-dim validation on pool view registration.  Flagged classes:
+
+* tautology   — an ``or``-arm that is a truthy constant makes the
+                whole test unfalsifiable;
+* self-compare — ``assert x == x`` (also ``<=``, ``>=``, ``is``);
+* constant     — ``assert True`` / ``assert 1`` (``assert False`` is
+                 a legitimate unreachable-branch sentinel and is not
+                 flagged);
+* tuple        — ``assert (cond, "msg")`` is a non-empty tuple, hence
+                 always true (the classic parenthesized-assert typo);
+* side-effect  — a mutating call (``.pop``/``.add``/…) or a walrus
+                 inside the test: ``python -O`` strips asserts, so the
+                 mutation silently disappears in optimized runs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.muxlint.core import Finding, Source, register
+
+MUTATORS = {"pop", "popleft", "append", "appendleft", "add", "remove",
+            "discard", "clear", "update", "setdefault", "extend",
+            "insert", "write", "sort", "reverse"}
+SELF_COMPARE_OPS = (ast.Eq, ast.LtE, ast.GtE, ast.Is)
+
+
+def _truthy_const(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and bool(node.value) \
+        and not isinstance(node.value, str)
+
+
+@register("dead-assert")
+def check(src: Source) -> Iterable[Finding]:
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Assert):
+            continue
+        test = node.test
+        if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.Or) \
+                and any(_truthy_const(v) for v in test.values):
+            yield src.finding(
+                "dead-assert", node,
+                "tautological assert: an `or <truthy constant>` arm "
+                "makes the test always pass")
+        elif isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                and isinstance(test.ops[0], SELF_COMPARE_OPS) \
+                and ast.dump(test.left) == ast.dump(test.comparators[0]):
+            yield src.finding(
+                "dead-assert", node,
+                "self-comparison assert always passes")
+        elif _truthy_const(test):
+            yield src.finding(
+                "dead-assert", node,
+                "assert on a truthy constant never fires")
+        elif isinstance(test, ast.Tuple) and test.elts:
+            yield src.finding(
+                "dead-assert", node,
+                "assert on a non-empty tuple is always true — did you "
+                "mean `assert cond, msg`?")
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.NamedExpr):
+                yield src.finding(
+                    "dead-assert", node,
+                    "walrus inside an assert: the binding vanishes "
+                    "under `python -O`")
+                break
+            if isinstance(sub, ast.Call) \
+                    and isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in MUTATORS:
+                yield src.finding(
+                    "dead-assert", node,
+                    f"side-effecting assert: `.{sub.func.attr}()` in "
+                    f"the test is stripped under `python -O`")
+                break

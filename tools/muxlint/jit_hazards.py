@@ -1,0 +1,137 @@
+"""Jit-hazard pass: keep jitted step impls retrace- and sync-free.
+
+The fused tick's zero-retrace guarantee (DESIGN.md §5) holds only if
+the functions under ``jax.jit`` never leave the traced world.  A
+function is *jitted* when its name ends in ``_impl`` (the
+``engine.jitted_step`` registry convention) or when it is passed —
+directly or through ``functools.partial`` — to a ``jax.jit(...)`` call
+in the same module.
+
+Inside a jitted function, positional parameters are traced values
+(keyword-only parameters after ``*`` are the static-config convention:
+``partial(impl, cfg=cfg)`` binds them before jit).  Tracedness
+propagates through simple assignments.  Flagged hazards:
+
+* ``.item()`` anywhere — a host sync by definition;
+* ``int()`` / ``float()`` / ``bool()`` / ``len()`` *of a traced
+  value* — concretization errors at trace time, or silent host syncs;
+* ``np.asarray`` / ``np.array`` — numpy forces the traced value onto
+  the host;
+* Python ``if`` / ``while`` / ternary on a traced value — a data-
+  dependent Python branch retraces per branch arm (use ``jnp.where``
+  / ``lax.cond``);
+* ``print`` — executes at trace time only, and its presence usually
+  means someone debugged a traced value through the host.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from tools.muxlint.core import Finding, Source, register
+
+HOST_CASTS = {"int", "float", "bool", "len"}
+NP_ALIASES = {"np", "numpy"}
+NP_SYNCS = {"asarray", "array"}
+
+
+def _jit_target_names(tree: ast.AST) -> Set[str]:
+    """Names passed to ``jax.jit(...)`` (directly or via
+    ``partial(fn, ...)``) anywhere in the module."""
+    out: Set[str] = set()
+
+    def name_args(call: ast.Call) -> List[str]:
+        names = []
+        for a in call.args:
+            if isinstance(a, ast.Name):
+                names.append(a.id)
+            elif isinstance(a, ast.Call):            # partial(fn, ...)
+                names.extend(name_args(a))
+        return names
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            f = node.func
+            is_jit = (isinstance(f, ast.Attribute) and f.attr == "jit") \
+                or (isinstance(f, ast.Name) and f.id == "jit")
+            if is_jit:
+                out.update(name_args(node))
+    return out
+
+
+def _jitted_functions(tree: ast.AST) -> List[ast.FunctionDef]:
+    targets = _jit_target_names(tree)
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)
+            and (n.name.endswith("_impl") or n.name in targets)]
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _traced_names(fn: ast.FunctionDef) -> Set[str]:
+    """Positional params, plus names assigned from traced expressions
+    (one forward pass — good enough for straight-line step impls)."""
+    traced = {a.arg for a in fn.args.args + fn.args.posonlyargs}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _names_in(node.value) & traced:
+            for tgt in node.targets:
+                traced |= {n.id for n in ast.walk(tgt)
+                           if isinstance(n, ast.Name)}
+        elif isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Name) \
+                and _names_in(node.value) & traced:
+            traced.add(node.target.id)
+    return traced
+
+
+@register("jit-hazard")
+def check(src: Source) -> Iterable[Finding]:
+    for fn in _jitted_functions(src.tree):
+        traced = _traced_names(fn)
+
+        def touches_traced(node: ast.AST) -> bool:
+            return bool(_names_in(node) & traced)
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr == "item":
+                    yield src.finding(
+                        "jit-hazard", node,
+                        f"`.item()` inside jitted `{fn.name}` is a "
+                        f"host sync")
+                elif isinstance(f, ast.Name) and f.id == "print":
+                    yield src.finding(
+                        "jit-hazard", node,
+                        f"`print` inside jitted `{fn.name}` runs at "
+                        f"trace time only (use jax.debug.print)")
+                elif isinstance(f, ast.Name) and f.id in HOST_CASTS \
+                        and node.args and touches_traced(node.args[0]):
+                    yield src.finding(
+                        "jit-hazard", node,
+                        f"`{f.id}()` on a traced value inside jitted "
+                        f"`{fn.name}` concretizes at trace time")
+                elif isinstance(f, ast.Attribute) \
+                        and isinstance(f.value, ast.Name) \
+                        and f.value.id in NP_ALIASES \
+                        and f.attr in NP_SYNCS and touches_traced(node):
+                    yield src.finding(
+                        "jit-hazard", node,
+                        f"`np.{f.attr}` on a traced value inside "
+                        f"jitted `{fn.name}` forces a host transfer "
+                        f"(use jnp)")
+            elif isinstance(node, (ast.If, ast.While)) \
+                    and touches_traced(node.test):
+                kw = "if" if isinstance(node, ast.If) else "while"
+                yield src.finding(
+                    "jit-hazard", node,
+                    f"Python `{kw}` on a traced value inside jitted "
+                    f"`{fn.name}` — each arm retraces (use jnp.where "
+                    f"/ lax.cond)")
+            elif isinstance(node, ast.IfExp) and touches_traced(node.test):
+                yield src.finding(
+                    "jit-hazard", node,
+                    f"ternary on a traced value inside jitted "
+                    f"`{fn.name}` — use jnp.where")

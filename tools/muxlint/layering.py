@@ -1,0 +1,90 @@
+"""Layering pass: enforce the ARCHITECTURE.md layer DAG.
+
+The graph below is the *declared* architecture — the import edges each
+layer is allowed to take, bottom-up (``config`` / ``paging`` at the
+base, ``launch`` on top).  The rules the roadmap leans on hardest:
+
+* ``core`` / ``kernels`` / ``models`` must not import ``serving`` or
+  ``launch`` (planning and kernels stay runnable without the runtime);
+* ``serving`` must not import ``launch`` (the serving layer is a
+  library; only the CLI layer may know about CLIs and meshes).
+
+Violations name the edge (``kernels -> serving``) so the fix — move
+the shared code down, or invert the dependency — is obvious from the
+message.  A module's layer is its first path segment under ``repro/``
+(top-level modules like ``config.py`` are their own single-module
+layers).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from tools.muxlint.core import Finding, Source, register
+
+# layer -> layers it may import (itself is always allowed)
+ALLOWED = {
+    "config":  set(),
+    "paging":  {"config"},
+    "models":  {"config"},
+    "configs": {"config", "models"},
+    "kernels": {"config", "paging", "models"},
+    "core":    {"config", "configs", "models"},
+    "train":   {"config", "configs", "models"},
+    "serving": {"config", "configs", "paging", "models", "kernels",
+                "core"},
+    "launch":  {"config", "configs", "paging", "models", "kernels",
+                "core", "train", "serving"},
+}
+
+
+def layer_of_path(path: str) -> Optional[str]:
+    """Layer of a repo file path, or None when the file is outside
+    ``repro`` (tools, tests, benchmarks — unconstrained)."""
+    parts = path.replace("\\", "/").split("/")
+    if "repro" not in parts:
+        return None
+    rest = parts[parts.index("repro") + 1:]
+    if not rest:
+        return None
+    head = rest[0][:-3] if len(rest) == 1 and rest[0].endswith(".py") \
+        else rest[0]
+    return head if head in ALLOWED else None
+
+
+def layer_of_module(module: str) -> Optional[str]:
+    """Layer of a dotted import target (``repro.serving.mux`` ->
+    ``serving``)."""
+    parts = module.split(".")
+    if parts[0] != "repro" or len(parts) < 2:
+        return None
+    return parts[1] if parts[1] in ALLOWED else None
+
+
+def _imported_modules(tree: ast.AST) -> Iterable[ast.stmt]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+
+
+@register("layering")
+def check(src: Source) -> Iterable[Finding]:
+    layer = layer_of_path(src.path)
+    if layer is None:
+        return
+    allowed = ALLOWED[layer] | {layer}
+    for node in _imported_modules(src.tree):
+        targets = []
+        if isinstance(node, ast.Import):
+            targets = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            targets = [node.module]
+        for mod in targets:
+            tgt = layer_of_module(mod)
+            if tgt is not None and tgt not in allowed:
+                yield src.finding(
+                    "layering", node,
+                    f"forbidden layer edge {layer} -> {tgt}: "
+                    f"`{mod}` may not be imported from the "
+                    f"{layer} layer (ARCHITECTURE.md DAG)")

@@ -1,0 +1,115 @@
+"""Clock-purity pass: deterministic-replay modules stay replayable.
+
+Scope: the ``serving`` and ``core`` layers — everything a
+``LogicalClock`` run flows through.  Bit-reproducible replay (DESIGN.md
+§9) breaks the moment one of these modules reads a wall clock or draws
+from nondeterministically-seeded randomness, so:
+
+* ``clock`` — any reference to ``time.time`` / ``time.perf_counter`` /
+  ``time.monotonic`` (and their ``_ns`` twins), whether called or
+  passed around as a default, is flagged.  References, not just calls:
+  a ``clock=time.perf_counter`` default is a deferred wall-clock read.
+  The one structural exemption is code inside a class named
+  ``WallClock`` — the single module that is *supposed* to own wall
+  time; every other legitimate site (solo-probe calibration, wall-
+  seconds reporting) must carry an inline justification or a baseline
+  entry.
+* ``rng`` — ``np.random.default_rng()`` with no seed, the legacy
+  module-level ``np.random.*`` draws (global hidden state), and
+  unseeded ``random.Random()`` / ``random.random()``-family calls.
+  ``jax.random`` is key-passing and exempt by construction.
+
+This is the pass that catches the ``time.time`` vs ``perf_counter``
+drift class (launch/dryrun.py had exactly that skew before PR 10).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from tools.muxlint.core import Finding, Source, register
+from tools.muxlint.layering import layer_of_path
+
+SCOPED_LAYERS = {"serving", "core"}
+WALL_CLOCK_ATTRS = {"time", "perf_counter", "monotonic",
+                    "time_ns", "perf_counter_ns", "monotonic_ns"}
+NP_GLOBAL_DRAWS = {"random", "rand", "randn", "randint", "normal",
+                   "uniform", "choice", "shuffle", "permutation",
+                   "poisson", "exponential", "seed"}
+PY_RANDOM_FNS = {"random", "randint", "randrange", "uniform", "choice",
+                 "shuffle", "gauss", "sample"}
+
+
+def _attr_chain(node: ast.AST):
+    """Dotted name of an attribute chain, e.g. ``np.random.default_rng``
+    -> ("np", "random", "default_rng"); None for non-name chains."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _wallclock_lines(tree: ast.AST) -> Set[int]:
+    """Lines inside any ``class WallClock`` body (structural allow)."""
+    lines: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "WallClock":
+            end = getattr(node, "end_lineno", node.lineno)
+            lines.update(range(node.lineno, end + 1))
+    return lines
+
+
+@register("purity")
+def check(src: Source) -> Iterable[Finding]:
+    if layer_of_path(src.path) not in SCOPED_LAYERS:
+        return
+    allowed = _wallclock_lines(src.tree)
+    for node in ast.walk(src.tree):
+        # -- wall-clock references -------------------------------------
+        if isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if (chain and len(chain) == 2 and chain[0] == "time"
+                    and chain[1] in WALL_CLOCK_ATTRS
+                    and node.lineno not in allowed):
+                yield src.finding(
+                    "clock", node,
+                    f"wall-clock reference `time.{chain[1]}` in a "
+                    f"deterministic-replay module — inject the unit "
+                    f"clock (MuxScheduler.clock) instead")
+        elif isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name in WALL_CLOCK_ATTRS:
+                    yield src.finding(
+                        "clock", node,
+                        f"`from time import {a.name}` in a "
+                        f"deterministic-replay module")
+        # -- randomness ------------------------------------------------
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            tail = chain[-1]
+            if chain[-2:] == ("random", "default_rng") \
+                    and not node.args and not node.keywords:
+                yield src.finding(
+                    "rng", node,
+                    "unseeded `default_rng()` — pass an explicit seed "
+                    "so replay is reproducible")
+            elif len(chain) >= 2 and chain[-2] == "random" \
+                    and chain[0] in ("np", "numpy") \
+                    and tail in NP_GLOBAL_DRAWS:
+                yield src.finding(
+                    "rng", node,
+                    f"legacy global-state draw `np.random.{tail}` — "
+                    f"use a seeded Generator")
+            elif chain[0] == "random" and len(chain) == 2 \
+                    and (tail in PY_RANDOM_FNS
+                         or (tail == "Random" and not node.args)):
+                yield src.finding(
+                    "rng", node,
+                    f"stdlib `random.{tail}` draws from hidden global "
+                    f"state — use a seeded Generator")
